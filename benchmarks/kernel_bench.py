@@ -1,0 +1,47 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-scale
+numbers; the BlockSpec tiling is the TPU deliverable)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spmv import ops as spmv_ops
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.xor_code import ops as xor_ops
+
+
+def _time(f, *args, reps=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    adj = jnp.array((rng.random((512, 512)) < 0.1), jnp.float32)
+    x = jnp.array(rng.standard_normal(512), jnp.float32)
+    us_k = _time(lambda a, b: spmv_ops.spmv(a, b), adj, x)
+    us_r = _time(lambda a, b: spmv_ops.spmv(a, b, use_kernel=False), adj, x)
+    report("spmv_pallas_512", us_k, f"ref_us={us_r:.0f}")
+
+    rows = jnp.array(rng.integers(0, 2**32, (3, 1024, 4), dtype=np.uint32))
+    valid = jnp.array(rng.random((3, 1024)) < 0.7)
+    us_k = _time(lambda a, b: xor_ops.xor_encode(a, b), rows, valid)
+    us_r = _time(lambda a, b: xor_ops.xor_encode(a, b, use_kernel=False),
+                 rows, valid)
+    report("xor_encode_pallas_1024", us_k, f"ref_us={us_r:.0f}")
+
+    G, L, P, N = 4, 256, 32, 16
+    args = (jnp.array(rng.standard_normal((G, L, P)), jnp.float32),
+            jnp.array(rng.uniform(0.01, 0.2, (G, L)), jnp.float32),
+            jnp.array(-rng.uniform(0.5, 2, G), jnp.float32),
+            jnp.array(rng.standard_normal((G, L, N)), jnp.float32),
+            jnp.array(rng.standard_normal((G, L, N)), jnp.float32),
+            jnp.array(rng.standard_normal(G), jnp.float32))
+    us_k = _time(lambda *a: ssd_ops.ssd(*a, chunk=64)[0], *args)
+    us_r = _time(lambda *a: ssd_ops.ssd(*a, use_kernel=False)[0], *args)
+    report("ssd_chunk_pallas_256", us_k, f"seq_ref_us={us_r:.0f}")

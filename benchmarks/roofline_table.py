@@ -1,0 +1,60 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md roofline tables."""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def render(path="dryrun_results.json", mesh="single"):
+    with open(path) as f:
+        rows = json.load(f)
+    out = []
+    out.append("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+               "bottleneck | MODEL/HLO flops | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"skip: {r['reason']} | - | - |")
+            continue
+        if r["status"] == "fail":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"FAIL: {r['error'][:60]} | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3g} |")
+    return "\n".join(out)
+
+
+def render_memory(path="dryrun_results.json"):
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["| arch | shape | mesh | args/dev | temps/dev | fits 16GB HBM? |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        tot = r["arg_bytes"] + r["temp_bytes"]
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                   f"{fmt_bytes(r['arg_bytes'])} | {fmt_bytes(r['temp_bytes'])} | "
+                   f"{'YES' if tot < 16e9 else 'NO (' + fmt_bytes(tot) + ')'} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    if mesh == "memory":
+        print(render_memory())
+    else:
+        print(render(mesh=mesh))

@@ -1,0 +1,30 @@
+"""Benchmark driver: one module per paper table/figure (+ kernels).
+
+Prints ``name,us_per_call,derived`` CSV. Roofline terms for the 40
+(arch x shape) cells come from the dry-run (launch/dryrun.py --all); this
+harness covers the paper-side experiments and kernels, which run at full
+fidelity on CPU.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    def report(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    from . import (coded_moe_dispatch, fig5_load_curve, kernel_bench,
+                   pagerank_phases, straggler_bench, theorem_tradeoffs)
+    for mod in (fig5_load_curve, theorem_tradeoffs, pagerank_phases,
+                kernel_bench, coded_moe_dispatch, straggler_bench):
+        try:
+            mod.run(report)
+        except Exception as e:  # noqa: BLE001
+            report(mod.__name__.split(".")[-1] + "_FAILED", -1.0,
+                   f"{type(e).__name__}: {e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

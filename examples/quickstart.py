@@ -1,0 +1,41 @@
+"""Quickstart: the paper's coded scheme on a small ER graph, end to end.
+
+Runs one distributed PageRank with the uncoded baseline and the coded scheme,
+verifies both match the single-machine oracle bit-exactly, and prints the
+communication loads against the paper's theory curves (Theorem 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core import graph_models as gm
+from repro.core import loads
+from repro.core.allocation import divisible_n, er_allocation
+
+K, p = 5, 0.1
+n = divisible_n(300, K, 2)
+print(f"ER(n={n}, p={p}) on K={K} servers\n")
+
+g = gm.erdos_renyi(n, p, seed=0)
+prog = algo.pagerank()
+oracle = algo.reference_run(prog, g, iters=3)
+
+print(f"{'r':>2} {'L_uncoded':>10} {'L_coded':>10} {'gain':>6} "
+      f"{'theory_uc':>10} {'theory_c':>9}")
+for r in range(1, K + 1):
+    alloc = er_allocation(n, K, r)
+    res_uc = engine.run(prog, g, alloc, 3, mode="uncoded")
+    res_c = engine.run(prog, g, alloc, 3, mode="coded")
+    # Bit-exact distributed execution: both must equal the oracle.
+    np.testing.assert_array_equal(res_uc.state, oracle)
+    np.testing.assert_array_equal(res_c.state, oracle)
+    lu, lc = res_uc.normalized_load, res_c.normalized_load
+    gain = lu / lc if lc else float("inf")
+    print(f"{r:2d} {lu:10.4f} {lc:10.4f} {gain:6.2f} "
+          f"{loads.uncoded_load_er(p, r, K):10.4f} "
+          f"{loads.coded_load_er_asymptotic(p, r, K):9.4f}")
+
+print("\nAll runs matched the single-machine oracle bit-exactly.")
+print("Coded shuffle achieves ~1/r of the uncoded load (Theorem 1).")

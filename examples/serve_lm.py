@@ -1,0 +1,23 @@
+"""Serve a small model with batched requests: prompt cache-fill + greedy
+decode, for one attention arch and one SSM arch (O(1)-state decode).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro import configs
+from repro.launch.serve import generate
+from repro.models import transformer as tfm
+from repro.models.layers import init_params
+
+for arch in ("internlm2-20b", "mamba2-370m"):
+    cfg = configs.get(arch).reduced()
+    params = init_params(tfm.model_spec(cfg), jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab)
+    toks = generate(cfg, params, prompts, max_new=12)
+    assert toks.shape == (4, 12) and (toks >= 0).all() and (toks < cfg.vocab).all()
+    print(f"{arch:16s} batch=4 prompt=8 -> 12 new tokens per request")
+    print("  sample:", toks[0].tolist())
+print("\nbatched serving OK (lockstep decode; KV cache for attention, "
+      "O(1) state for SSM).")

@@ -1,0 +1,150 @@
+"""Sharded checkpointing with async save and elastic restore.
+
+Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf (flattened path
+key).  Params are saved with their logical axes, so restore re-shards onto
+whatever mesh the restarted job has (elastic scaling across K / pod counts).
+Saves run on a background thread (training never blocks on disk); the
+manifest is written last and atomically, so a crash mid-save never corrupts
+the latest complete checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# np.save round-trips only standard dtypes; bf16 etc. are stored as a
+# same-width integer view and reconstructed from the manifest dtype string.
+_VIEW_DTYPES = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+                "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+                "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+
+
+def _flat(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ---- save ----
+
+    def save(self, step: int, params, opt_state=None, extra: dict | None = None,
+             blocking: bool = False):
+        """Snapshot to host memory synchronously, write to disk async."""
+        host = {
+            "params": jax.tree.map(np.asarray, params),
+            "opt_state": jax.tree.map(np.asarray, opt_state)
+            if opt_state is not None else None,
+        }
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, host: dict, extra: dict):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for group in ("params", "opt_state"):
+            if host[group] is None:
+                continue
+            for key, arr in _flat(host[group]).items():
+                fname = f"{group}__{key.replace('/', '.')}.npy"
+                dtype = str(arr.dtype)
+                if dtype in _VIEW_DTYPES:
+                    arr = arr.view(_VIEW_DTYPES[dtype][0])
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"][f"{group}/{key}"] = {
+                    "file": fname, "shape": list(arr.shape), "dtype": dtype}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)          # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # ---- restore ----
+
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template_params, template_opt=None, step: int | None = None,
+                shardings=None):
+        """Restore onto the *current* job's tree/mesh.
+
+        template_*: pytrees (arrays or ShapeDtypeStructs) defining structure.
+        shardings: optional matching tree of NamedShardings (elastic re-shard:
+        the checkpoint may have been written from a different mesh).
+        """
+        step = self.latest() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        def load_group(name, template, shards):
+            if template is None:
+                return None
+            flat_t = _flat(template)
+            flat_s = _flat(shards) if shards is not None else {}
+            out = {}
+            for key in flat_t:
+                meta = manifest["leaves"][f"{name}/{key}"]
+                arr = np.load(os.path.join(d, meta["file"]))
+                if meta["dtype"] in _VIEW_DTYPES:
+                    arr = arr.view(_VIEW_DTYPES[meta["dtype"]][1])
+                # Always produce jax arrays (donation-safe); re-shard when the
+                # new mesh's shardings are provided (elastic restore).
+                arr = jax.device_put(arr, flat_s.get(key))
+                out[key] = arr
+            # Rebuild tree from template structure.
+            leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+            ordered = []
+            for path, _ in leaves_with_paths:
+                k = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                             for p in path)
+                ordered.append(out[k])
+            return jax.tree_util.tree_unflatten(treedef, ordered)
+
+        params = load_group("params", template_params, shardings)
+        opt = load_group("opt_state", template_opt, None) \
+            if template_opt is not None else None
+        return step, params, opt, manifest["extra"]

@@ -1,0 +1,8 @@
+"""Core: the paper's coded distributed graph-analytics scheme.
+
+Subgraph/computation allocation (§IV-A), bit-exact XOR coded Shuffle (Fig. 6),
+the distributed MapReduce-on-graph engine (§II-B), theory bounds (Thms 1-4),
+and r-redundancy fault tolerance.
+"""
+from . import algorithms, allocation, bitcodec, coded_shuffle, engine  # noqa: F401
+from . import faults, graph_models, loads, uncoded_shuffle  # noqa: F401

@@ -1,0 +1,107 @@
+"""Vertex programs expressed as MapReduce pairs (paper §II-A, Examples 1-2).
+
+An algorithm supplies:
+  map_values(graph, state)  -> V [n, n] float32 where V[i, j] = g_{i,j}(w_j)
+                               for (i, j) in E (garbage elsewhere; the engine
+                               masks with the adjacency),
+  reduce(vals, mask, state) -> new state from each vertex's neighbor values,
+  identity                  -> the padding value that is absorbing for reduce.
+
+The dense-matrix form is the blocked-dense TPU adaptation (DESIGN.md §3): a
+PageRank Map over a vertex block is one column-scaled adjacency tile, and the
+Reduce is a masked row reduction - both MXU/VPU friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .graph_models import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    name: str
+    identity: float
+    init: Callable[[Graph], np.ndarray]
+    map_values: Callable[[Graph, np.ndarray], np.ndarray]
+    reduce: Callable[[np.ndarray, np.ndarray, np.ndarray, Graph], np.ndarray]
+
+
+def pagerank(damping: float = 0.15) -> VertexProgram:
+    """Example 1. state = rank vector Pi; v_{i,j} = Pi(j) / deg(j)."""
+
+    def init(g: Graph) -> np.ndarray:
+        return np.full(g.n, 1.0 / g.n, dtype=np.float32)
+
+    def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        deg = np.maximum(g.degrees(), 1)
+        contrib = (state / deg).astype(np.float32)     # per-source value
+        return np.broadcast_to(contrib[None, :], (g.n, g.n))
+
+    def reduce(vals, mask, state, g: Graph) -> np.ndarray:
+        acc = np.where(mask, vals, 0.0).sum(axis=1)
+        return ((1.0 - damping) * acc + damping / g.n).astype(np.float32)
+
+    return VertexProgram("pagerank", 0.0, init, map_values, reduce)
+
+
+def sssp(source: int = 0) -> VertexProgram:
+    """Example 2. state = distance vector D; v_{i,j} = D(j) + t(j, i)."""
+
+    def init(g: Graph) -> np.ndarray:
+        d = np.full(g.n, np.inf, dtype=np.float32)
+        d[source] = 0.0
+        return d
+
+    def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        w = g.weights()
+        return (state[None, :] + w.T).astype(np.float32)   # t(j, i) = w[j, i]
+
+    def reduce(vals, mask, state, g: Graph) -> np.ndarray:
+        vals = np.where(mask, vals, np.inf)
+        return np.minimum(state, vals.min(axis=1, initial=np.inf)).astype(np.float32)
+
+    return VertexProgram("sssp", np.inf, init, map_values, reduce)
+
+
+def connected_components() -> VertexProgram:
+    """Min-label propagation; converges to per-component min vertex id."""
+
+    def init(g: Graph) -> np.ndarray:
+        return np.arange(g.n, dtype=np.float32)
+
+    def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        return np.broadcast_to(state[None, :], (g.n, g.n)).astype(np.float32)
+
+    def reduce(vals, mask, state, g: Graph) -> np.ndarray:
+        vals = np.where(mask, vals, np.inf)
+        return np.minimum(state, vals.min(axis=1, initial=np.inf)).astype(np.float32)
+
+    return VertexProgram("cc", np.inf, init, map_values, reduce)
+
+
+def degree_count() -> VertexProgram:
+    """Trivial one-shot program: each vertex counts its neighbors."""
+
+    def init(g: Graph) -> np.ndarray:
+        return np.zeros(g.n, dtype=np.float32)
+
+    def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        return np.ones((g.n, g.n), dtype=np.float32)
+
+    def reduce(vals, mask, state, g: Graph) -> np.ndarray:
+        return np.where(mask, vals, 0.0).sum(axis=1).astype(np.float32)
+
+    return VertexProgram("degree", 0.0, init, map_values, reduce)
+
+
+def reference_run(program: VertexProgram, g: Graph, iters: int) -> np.ndarray:
+    """Single-machine oracle: the engine (any mode) must match this exactly."""
+    state = program.init(g)
+    for _ in range(iters):
+        vals = program.map_values(g, state)
+        state = program.reduce(vals, g.adj, state, g)
+    return state

@@ -1,0 +1,35 @@
+"""Bit-exact (de)serialization of intermediate values for the coded Shuffle.
+
+The paper splits each T-bit intermediate value v_{i,j} into r segments of T/r
+bits. We represent values as float32 (T = 32) and operate on their exact bit
+patterns so XOR coding and recovery are bit-perfect for *any* r (segment
+boundaries need not divide 32 evenly; segments are the ceil/floor split).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+T_BITS = 32
+
+
+def floats_to_bits(x: np.ndarray) -> np.ndarray:
+    """[m] float32 -> [m, 32] uint8 in {0,1} (big-endian bit order)."""
+    x = np.ascontiguousarray(x, dtype=np.float32)
+    return np.unpackbits(x.view(np.uint8).reshape(-1, 4), axis=1)
+
+
+def bits_to_floats(bits: np.ndarray) -> np.ndarray:
+    """[m, 32] uint8 bits -> [m] float32."""
+    packed = np.packbits(bits.astype(np.uint8), axis=1)
+    return packed.reshape(-1, 4).copy().view(np.float32).ravel()
+
+
+def segment_bounds(r: int, t_bits: int = T_BITS) -> list[tuple[int, int]]:
+    """Split [0, t_bits) into r near-equal contiguous segments."""
+    edges = np.linspace(0, t_bits, r + 1).round().astype(int)
+    return [(int(edges[s]), int(edges[s + 1])) for s in range(r)]
+
+
+def split_segments(bits: np.ndarray, r: int) -> list[np.ndarray]:
+    """[m, 32] bits -> r arrays [m, seg_len_s]."""
+    return [bits[:, a:b] for a, b in segment_bounds(r, bits.shape[1])]

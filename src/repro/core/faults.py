@@ -1,0 +1,142 @@
+"""Fault tolerance built on the paper's r-fold Map redundancy (DESIGN.md §5).
+
+The coded allocation stores every vertex at r servers, so the loss of up to
+r-1 servers destroys no Map shard. On failure of server f:
+  * f's Reduce partition R_f is re-assigned round-robin to survivors,
+  * survivors fetch the values the new owners are missing (uncoded unicast;
+    coded groups that contained f are degraded for exactly f's segments),
+  * if r == 1, batches uniquely Mapped at f are *re-Mapped* by survivors
+    (counted as recovery compute, not shuffle bits).
+
+`run_with_failure` executes this end-to-end and must match the oracle exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .algorithms import VertexProgram
+from .allocation import Allocation
+from .bitcodec import T_BITS
+from .engine import EngineResult, _reduce_distributed
+from .graph_models import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryStats:
+    failed: tuple[int, ...]
+    remapped_vertices: int         # Map work repeated by survivors (r==1 only)
+    recovery_bits: int             # extra shuffle bits for recovery
+
+
+def degrade_allocation(alloc: Allocation, failed: tuple[int, ...]) -> tuple[Allocation, RecoveryStats]:
+    """Reassign failed servers' Reduce partitions; re-Map orphaned batches."""
+    survivors = [k for k in range(alloc.K) if k not in failed]
+    if not survivors:
+        raise ValueError("all servers failed")
+    reduce_owner = alloc.reduce_owner.copy()
+    orphans = np.flatnonzero(np.isin(reduce_owner, failed))
+    reduce_owner[orphans] = np.array(survivors)[np.arange(len(orphans)) % len(survivors)]
+    map_sets = alloc.map_sets.copy()
+    map_sets[list(failed), :] = False
+    # Re-Map any vertex no longer Mapped anywhere (possible only if r <= |failed|).
+    unmapped = np.flatnonzero(~map_sets.any(axis=0))
+    for idx, v in enumerate(unmapped):
+        map_sets[survivors[idx % len(survivors)], v] = True
+    degraded = Allocation(alloc.n, alloc.K, alloc.r, alloc.subsets,
+                          alloc.batch_of, map_sets, reduce_owner)
+    stats = RecoveryStats(tuple(failed), int(len(unmapped)), 0)
+    return degraded, stats
+
+
+def run_with_failure(program: VertexProgram, g: Graph, alloc: Allocation,
+                     iters: int, failed: tuple[int, ...],
+                     fail_at_iter: int = 0) -> tuple[EngineResult, RecoveryStats]:
+    """Run iterations; servers in `failed` die at `fail_at_iter` (post-Map).
+
+    Iterations before the failure use the coded schedule; after the failure
+    the degraded allocation shuffles uncoded (a real deployment would rebuild
+    the coded schedule for K' = K - |failed| at the next checkpoint; see
+    rebalance()).
+    """
+    from .uncoded_shuffle import run_uncoded
+
+    state = program.init(g)
+    total_bits = 0
+    degraded, stats = degrade_allocation(alloc, failed)
+    recovery_bits = 0
+    for it in range(iters):
+        alloc_now = alloc if it < fail_at_iter else degraded
+        values = program.map_values(g, state).astype(np.float32)
+        res = run_uncoded(g.adj, values, alloc_now)
+        if it == fail_at_iter:
+            recovery_bits = res.bits_sent  # first post-failure shuffle = recovery
+        total_bits += res.bits_sent
+        state = _reduce_distributed(program, g, alloc_now, values,
+                                    res.delivered, state)
+    result = EngineResult(state, iters, total_bits, f"failover-{len(failed)}")
+    return result, dataclasses.replace(stats, recovery_bits=recovery_bits)
+
+
+def straggler_coded_load(adj: np.ndarray, alloc: Allocation,
+                         stragglers: tuple[int, ...]) -> float:
+    """Normalized coded load when `stragglers` send nothing.
+
+    When sender s straggles, the lexicographically-first healthy member s' of
+    its group takes over s's coded columns. s' holds every row of s's table
+    EXCEPT its own (Z^{s'} is exactly what s' is missing), so:
+      * s' re-sends s's columns with the s'-row omitted (same bits; the other
+        receivers strip one fewer row),
+      * s'-s own segments that s owed it are unicast by a third healthy
+        member (they all Mapped B_{S\\{s'}}) - that unicast is the overhead.
+    """
+    import itertools
+
+    from .bitcodec import T_BITS, segment_bounds
+    from .coded_shuffle import group_need
+
+    K, r = alloc.K, alloc.r
+    bounds = segment_bounds(r)
+    total_bits = 0
+    for S in itertools.combinations(range(K), r + 1):
+        sizes = {k: len(group_need(adj, alloc, S, k)) for k in S}
+        healthy = [x for x in S if x not in stragglers]
+        if len(healthy) < 2:
+            raise ValueError(f"group {S} lacks healthy senders")
+        for s in S:
+            rows = []
+            for k in S:
+                if k == s:
+                    continue
+                others = tuple(sorted(set(S) - {k}))
+                a, b = bounds[others.index(s)]
+                rows.append((k, sizes[k], b - a))
+            ncols = max((sz for _, sz, _ in rows), default=0)
+            bits = sum(max((w for _, sz, w in rows if c < sz), default=0)
+                       for c in range(ncols))
+            total_bits += bits
+            if s in stragglers:
+                stand_in = next(x for x in healthy if x != s)
+                # Overhead: unicast of the stand-in's own segments from row
+                # s' of s's table (it cannot XOR what it does not have).
+                others = tuple(sorted(set(S) - {stand_in}))
+                a, b = bounds[others.index(s)]
+                total_bits += sizes[stand_in] * (b - a)
+    return total_bits / (alloc.n * alloc.n * T_BITS)
+
+
+def rebalance(alloc: Allocation, K_new: int) -> Allocation:
+    """Elastic re-allocation onto K_new servers (same n, same r if feasible).
+
+    Deterministic: allocation depends only on (n, K, r), so scale-up/down is a
+    pure re-partition - checkpointed vertex state carries over unchanged.
+    """
+    from .allocation import divisible_n, er_allocation
+
+    r = min(alloc.r, K_new)
+    n2 = divisible_n(alloc.n, K_new, r)
+    if n2 != alloc.n:
+        raise ValueError(
+            f"n={alloc.n} not compatible with K={K_new}, r={r}; pad to {n2}")
+    return er_allocation(alloc.n, K_new, r)

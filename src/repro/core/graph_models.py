@@ -1,0 +1,104 @@
+"""Random graph samplers for the four models studied in the paper.
+
+All samplers return a dense symmetric boolean adjacency matrix (no self loops),
+which is the representation the validation-scale engine and the blocked-dense
+TPU kernels consume (see DESIGN.md §7.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected graph realization plus the model metadata."""
+
+    adj: np.ndarray          # [n, n] bool, symmetric, zero diagonal
+    model: str               # 'er' | 'rb' | 'sbm' | 'pl'
+    params: dict
+
+    @property
+    def n(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+    def degrees(self) -> np.ndarray:
+        return self.adj.sum(axis=1)
+
+    def weights(self, rng: np.random.Generator | None = None,
+                low: float = 0.5, high: float = 1.5) -> np.ndarray:
+        """Symmetric positive edge weights (for SSSP); +inf on non-edges."""
+        rng = rng or np.random.default_rng(0)
+        w = rng.uniform(low, high, size=self.adj.shape)
+        w = np.triu(w, 1)
+        w = w + w.T
+        return np.where(self.adj, w, np.inf)
+
+
+def _symmetrize(upper: np.ndarray) -> np.ndarray:
+    upper = np.triu(upper, 1)
+    return upper | upper.T
+
+
+def erdos_renyi(n: int, p: float, seed: int = 0) -> Graph:
+    """ER(n, p): every edge present independently w.p. p."""
+    rng = np.random.default_rng(seed)
+    adj = _symmetrize(rng.random((n, n)) < p)
+    return Graph(adj, "er", {"n": n, "p": p, "seed": seed})
+
+
+def random_bipartite(n1: int, n2: int, q: float, seed: int = 0) -> Graph:
+    """RB(n1, n2, q): only cross-cluster edges, each present w.p. q.
+
+    Vertices [0, n1) form cluster 1 and [n1, n1+n2) cluster 2.
+    """
+    rng = np.random.default_rng(seed)
+    n = n1 + n2
+    adj = np.zeros((n, n), dtype=bool)
+    cross = rng.random((n1, n2)) < q
+    adj[:n1, n1:] = cross
+    adj[n1:, :n1] = cross.T
+    return Graph(adj, "rb", {"n1": n1, "n2": n2, "q": q, "seed": seed})
+
+
+def stochastic_block(n1: int, n2: int, p: float, q: float, seed: int = 0) -> Graph:
+    """SBM(n1, n2, p, q): intra-cluster w.p. p, cross-cluster w.p. q (q < p)."""
+    rng = np.random.default_rng(seed)
+    n = n1 + n2
+    probs = np.full((n, n), q)
+    probs[:n1, :n1] = p
+    probs[n1:, n1:] = p
+    adj = _symmetrize(rng.random((n, n)) < probs)
+    return Graph(adj, "sbm", {"n1": n1, "n2": n2, "p": p, "q": q, "seed": seed})
+
+
+def power_law(n: int, gamma: float, rho: float | None = None, seed: int = 0,
+              d_min: float = 1.0) -> Graph:
+    """PL(n, gamma, rho): expected degrees are iid power-law(gamma) samples and
+    P[(i,j) in E] = min(1, rho * d_i * d_j) (Chung-Lu style, paper Appendix E).
+
+    If rho is None it is set to 1 / vol so that expected degrees are honored.
+    """
+    rng = np.random.default_rng(seed)
+    # Inverse-CDF sampling of a Pareto-like pmf P[d] ~ d^-gamma, d >= d_min.
+    u = rng.random(n)
+    degrees = d_min * (1.0 - u) ** (-1.0 / (gamma - 1.0))
+    if rho is None:
+        rho = 1.0 / degrees.sum()
+    probs = np.minimum(1.0, rho * np.outer(degrees, degrees))
+    adj = _symmetrize(rng.random((n, n)) < probs)
+    return Graph(adj, "pl", {"n": n, "gamma": gamma, "rho": rho, "seed": seed})
+
+
+def sample(model: str, seed: int = 0, **kw) -> Graph:
+    return {
+        "er": erdos_renyi,
+        "rb": random_bipartite,
+        "sbm": stochastic_block,
+        "pl": power_law,
+    }[model](seed=seed, **kw)

@@ -1,0 +1,81 @@
+"""Theory curves and bounds for the computation-communication trade-off.
+
+Everything here is closed-form from the paper; the benchmarks overlay these on
+empirical loads measured by the engine.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def uncoded_load_er(p: float, r: float, K: int) -> float:
+    """L^UC(r) = p (1 - r/K)   (paper §IV-A)."""
+    return p * (1.0 - r / K)
+
+
+def coded_load_er_asymptotic(p: float, r: int, K: int) -> float:
+    """L^C(r) -> (1/r) p (1 - r/K)   (Theorem 1 achievability)."""
+    return p * (1.0 - r / K) / r
+
+
+def coded_load_er_finite(n: int, p: float, r: int, K: int) -> float:
+    """Finite-n upper bound via Lemma 1 / eq. (41):
+    L <= K C(K-1, r) E[Q] / (r n^2),  E[Q] <= g~ p + 2 sqrt(g~ p p~ log r).
+    """
+    g_tilde = n * n / (K * math.comb(K, r))
+    eq = g_tilde * p
+    if r > 1:
+        eq += 2.0 * math.sqrt(g_tilde * p * (1 - p) * math.log(r))
+    return K * math.comb(K - 1, r) * eq / (r * n * n)
+
+
+def lower_bound_er(p: float, r: float, K: int) -> float:
+    """Converse (Theorem 1 / Lemma 3 with the convexity step):
+    L*(r) >= (1/r) p (1 - r/K), valid for any real 1 <= r <= K."""
+    return p * (1.0 - r / K) / r
+
+
+def lower_bound_lemma3(p: float, a_j: np.ndarray, n: int, K: int) -> float:
+    """Exact Lemma-3 bound for a given Map-multiplicity histogram a^j
+    (a_j[j-1] = #vertices Mapped at exactly j servers)."""
+    j = np.arange(1, K + 1)
+    return float(p * np.sum(a_j / n * (K - j) / (K * j)))
+
+
+def bounds_rb(q: float, r: int, K: int) -> tuple[float, float]:
+    """Theorem 2: (1/(8r))(1-2r/K) <= lim L*/q <= (1/(2r))(1-2r/K)."""
+    lo = (1.0 / (8 * r)) * max(0.0, 1.0 - 2 * r / K)
+    hi = (1.0 / (2 * r)) * max(0.0, 1.0 - 2 * r / K)
+    return lo, hi
+
+
+def achievable_sbm(n1: int, n2: int, p: float, q: float, r: int, K: int) -> float:
+    """Theorem 3 achievability: (pn1^2 + pn2^2 + 2qn1n2)/(n^2 r) (1 - r/K)."""
+    n = n1 + n2
+    eff = (p * n1 * n1 + p * n2 * n2 + 2 * q * n1 * n2) / (n * n)
+    return eff / r * (1.0 - r / K)
+
+
+def lower_bound_sbm(q: float, r: int, K: int) -> float:
+    """Theorem 3 converse: L*/q >= (1/r)(1 - r/K)."""
+    return q / r * (1.0 - r / K)
+
+
+def achievable_pl(gamma: float, r: int, K: int) -> float:
+    """Theorem 4: lim n L*(r) / ((g-1)/(g-2)) <= (1/r)(1 - r/K);
+    returns the bound on n*L."""
+    assert gamma > 2
+    return (gamma - 1) / (gamma - 2) / r * (1.0 - r / K)
+
+
+def total_time_model(r: float, t_map: float, t_shuffle: float,
+                     t_reduce: float) -> float:
+    """Remark 10: T(r) ~ r T_map + T_shuffle / r + T_reduce."""
+    return r * t_map + t_shuffle / r + t_reduce
+
+
+def optimal_r(t_map: float, t_shuffle: float) -> float:
+    """Remark 10 heuristic: r* = sqrt(T_shuffle / T_map)."""
+    return math.sqrt(t_shuffle / t_map)

@@ -1,0 +1,35 @@
+"""Jitted public wrappers around the SpMV kernel (auto-padding + PageRank)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import spmv as spmv_ref
+from .spmv import spmv_pallas
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def spmv(adj: jnp.ndarray, x: jnp.ndarray, *, bm: int = 128, bk: int = 128,
+         use_kernel: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """y = adj @ x, padding ragged shapes up to the tile grid."""
+    if not use_kernel:
+        return spmv_ref(adj, x)
+    m, n = adj.shape
+    a = _pad_to(_pad_to(adj.astype(jnp.float32), bm, 0), bk, 1)
+    xp = _pad_to(x.astype(jnp.float32), bk, 0)
+    return spmv_pallas(a, xp, bm=bm, bk=bk, interpret=interpret)[:m]
+
+
+def pagerank_step(adj: jnp.ndarray, rank: jnp.ndarray, damping: float = 0.15,
+                  **kw) -> jnp.ndarray:
+    deg = jnp.maximum(adj.sum(axis=0), 1.0)
+    acc = spmv(adj, rank / deg, **kw)
+    return (1.0 - damping) * acc + damping / adj.shape[0]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the blocked adjacency SpMV (PageRank Map+Reduce)."""
+import jax.numpy as jnp
+
+
+def spmv(adj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x with A a dense {0,1} (or weighted) adjacency, fp32 accum.
+
+    adj: [m, n] float32 (blocked-dense adjacency tile row)
+    x:   [n] float32 (per-source Map values, e.g. rank/degree)
+    ->   [m] float32 Reduce accumulations.
+    """
+    return jnp.dot(adj.astype(jnp.float32), x.astype(jnp.float32),
+                   precision="highest")
+
+
+def pagerank_step(adj: jnp.ndarray, rank: jnp.ndarray, damping: float = 0.15
+                  ) -> jnp.ndarray:
+    """One full PageRank iteration (paper Example 1) on dense adjacency."""
+    deg = jnp.maximum(adj.sum(axis=0), 1.0)
+    contrib = rank / deg
+    acc = spmv(adj, contrib)
+    return (1.0 - damping) * acc + damping / adj.shape[0]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence (arXiv:2405.21060).
+
+Sequential (definitionally correct) state-space scan:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T        h in [N, P]
+    y_t = C_t^T h_t + D * x_t
+Per head: A, D scalars; x [L, P]; B, C [L, N].
+"""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+             C: jnp.ndarray, D: jnp.ndarray,
+             h0: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [L, P], dt [L], A scalar, B/C [L, N], D scalar -> (y [L, P], h [N, P])."""
+    L, P = x.shape
+    N = B.shape[1]
+    h0 = jnp.zeros((N, P), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt * A)
+        h = a * h + dtt * jnp.outer(bt, xt)
+        y = ct @ h + D * xt
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0, (x.astype(jnp.float32), dt.astype(jnp.float32),
+                                     B.astype(jnp.float32), C.astype(jnp.float32)))
+    return ys, hT
+
+
+def ssd_scan_batched(x, dt, A, B, C, D, h0=None):
+    """vmapped over a leading batch*heads axis. x [G, L, P], dt [G, L],
+    A [G], B/C [G, L, N], D [G]."""
+    f = jax.vmap(ssd_scan, in_axes=(0, 0, 0, 0, 0, 0, 0 if h0 is not None else None))
+    return f(x, dt, A, B, C, D, h0)

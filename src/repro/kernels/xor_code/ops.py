@@ -1,0 +1,33 @@
+"""Jitted public wrappers for XOR encode/decode (fused TPU shuffle path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .xor_code import xor_encode_pallas
+
+
+def xor_encode(rows: jnp.ndarray, valid: jnp.ndarray, *, use_kernel: bool = True,
+               interpret: bool = True) -> jnp.ndarray:
+    if use_kernel:
+        return xor_encode_pallas(rows, valid, interpret=interpret)
+    return ref.xor_encode(rows, valid)
+
+
+def xor_decode(coded: jnp.ndarray, known_rows: jnp.ndarray,
+               known_valid: jnp.ndarray, *, use_kernel: bool = True,
+               interpret: bool = True) -> jnp.ndarray:
+    """coded [C, W]; known_rows [r-1, C, W]; -> missing segments [C, W]."""
+    strip = xor_encode(known_rows, known_valid, use_kernel=use_kernel,
+                       interpret=interpret)
+    return jnp.bitwise_xor(coded, strip)
+
+
+def floats_as_words(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-preserving float32 -> uint32 view (lane codec for the fused path)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def words_as_floats(w: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(w.astype(jnp.uint32), jnp.float32)

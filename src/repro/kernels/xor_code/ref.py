@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the coded-Shuffle XOR packing.
+
+Segments are carried as uint32 words (the fused TPU shuffle path codes whole
+float32 values per lane rather than sub-word bit splits; see DESIGN.md §7.2 -
+the value axis is pre-split into r lanes so the per-lane XOR is equivalent).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def xor_encode(rows: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Column-wise XOR of the alignment table.
+
+    rows:  [r, C, W] uint32 - row k = segments destined for receiver k.
+    valid: [r, C] bool      - entry presence (rows are left-aligned, ragged).
+    ->     [C, W] uint32 coded columns (absent entries contribute 0).
+    """
+    masked = jnp.where(valid[..., None], rows, jnp.uint32(0))
+    return jax.lax.reduce(masked, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+
+
+def xor_decode(coded: jnp.ndarray, known_rows: jnp.ndarray,
+               known_valid: jnp.ndarray) -> jnp.ndarray:
+    """Strip locally-known rows from the coded columns.
+
+    coded:       [C, W] uint32 received columns.
+    known_rows:  [r-1, C, W] uint32 segments the receiver Mapped itself.
+    known_valid: [r-1, C] bool.
+    ->           [C, W] uint32 - the receiver's own missing segments.
+    """
+    strip = xor_encode(known_rows, known_valid)
+    return jnp.bitwise_xor(coded, strip)

@@ -1,0 +1,47 @@
+"""XOR alignment-table packing as a Pallas TPU kernel.
+
+The coded Shuffle's encode is a masked XOR-reduce over the r table rows
+(paper Fig. 6). On TPU this is a VPU bitwise op over [bc, W] uint32 tiles in
+VMEM; r is small and static, so the row loop is unrolled. The same kernel
+serves decode (strip) because XOR is its own inverse.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xor_kernel(rows_ref, valid_ref, o_ref, *, r: int):
+    acc = jnp.zeros_like(o_ref)
+    for i in range(r):                       # r is static: unrolled on the VPU
+        seg = rows_ref[i]
+        mask = valid_ref[i][..., None]
+        acc = jnp.bitwise_xor(acc, jnp.where(mask, seg, jnp.uint32(0)))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def xor_encode_pallas(rows: jnp.ndarray, valid: jnp.ndarray, *, bc: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """rows [r, C, W] uint32, valid [r, C] bool -> coded [C, W] uint32."""
+    r, c, w = rows.shape
+    pad = (-c) % bc
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    cp = c + pad
+    out = pl.pallas_call(
+        functools.partial(_xor_kernel, r=r),
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((r, bc, w), lambda i: (0, i, 0)),
+            pl.BlockSpec((r, bc), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bc, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, w), jnp.uint32),
+        interpret=interpret,
+    )(rows, valid.astype(jnp.bool_))
+    return out[:c]

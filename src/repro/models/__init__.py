@@ -1,0 +1,2 @@
+"""Assigned-architecture model substrate (pure JAX, scan-over-layers)."""
+from . import decode, layers, mla, moe, ssm, transformer  # noqa: F401

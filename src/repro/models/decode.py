@@ -1,0 +1,195 @@
+"""Serving path: KV/state cache layout, prefill (cache fill) and decode step.
+
+Cache tensors are stacked over layers (leading L axis) so decode is one scan.
+Decode is lockstep-batched (all sequences at the same position - the serving
+driver pads/batches accordingly; DESIGN.md notes the raggedness simplification).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..sharding.rules import constrain
+from . import ssm as ssm_mod
+from .layers import rms_norm
+from .transformer import (_embed_inputs, _window_arr, block_decode,
+                          block_forward, moe_interleave)
+
+
+# ---------------- cache layout ----------------
+
+def _attn_cache_struct(cfg: ModelConfig, L: int, B: int, S: int):
+    from ..sharding.rules import tp_size
+    if cfg.mla:
+        # The latent cache has no head axis: always shard its seq dim over
+        # the tensor axis (the per-chunk softmax reduces across it).
+        m = cfg.mla
+        return {"lat": ((L, B, S, m.kv_lora_rank),
+                        ("layers", "batch", "act_seq_tp", None)),
+                "rope": ((L, B, S, m.qk_rope_head_dim),
+                         ("layers", "batch", "act_seq_tp", None))}
+    # PERF (EXPERIMENTS.md SSPerf, cell internlm2/decode_32k): when the kv
+    # heads can't split the tensor axis, shard the cache *sequence* over it
+    # instead of replicating - replication both overflows HBM (48L x 32k x
+    # 8kv caches) and forces a full-cache all-gather every decoded token.
+    kv_div = cfg.n_kv_heads % tp_size() == 0
+    seq_ax = "act_seq" if kv_div else "act_seq_tp"
+    head_ax = "act_kv" if kv_div else None
+    return {"k": ((L, B, S, cfg.n_kv_heads, cfg.head_dim),
+                  ("layers", "batch", seq_ax, head_ax, None)),
+            "v": ((L, B, S, cfg.n_kv_heads, cfg.head_dim),
+                  ("layers", "batch", seq_ax, head_ax, None))}
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """{name: (shape, logical_axes)} for every cache tensor."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        nh = s.n_heads(cfg.d_model)
+        out = {"conv": ((cfg.n_layers, B, s.conv_width - 1, di + 2 * s.d_state),
+                        ("layers", "batch", None, "inner")),
+               "ssm": ((cfg.n_layers, B, nh, s.d_state, s.head_dim),
+                       ("layers", "batch", "act_heads", None, None))}
+        if cfg.family == "hybrid" and cfg.attn_every:
+            n_attn = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+            out |= {f"attn_{k}": v for k, v in
+                    _attn_cache_struct(cfg, n_attn, B, S).items()}
+        return out
+    unit = moe_interleave(cfg)
+    L = cfg.n_layers // unit
+    if unit == 1:
+        return _attn_cache_struct(cfg, L, B, S)
+    out = {}
+    for part in ("dense", "moe"):
+        out |= {f"{part}_{k}": v for k, v in
+                _attn_cache_struct(cfg, L, B, S).items()}
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct cache stand-ins (+ position scalar) for the dry-run."""
+    out = {name: jax.ShapeDtypeStruct(sh, jnp.float32 if "ssm" in name else dtype)
+           for name, (sh, _) in cache_struct(cfg, shape).items()}
+    out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+def init_cache(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    out = {name: jnp.zeros(sh, jnp.float32 if "ssm" in name else dtype)
+           for name, (sh, _) in cache_struct(cfg, shape).items()}
+    out["pos"] = jnp.zeros((), jnp.int32)
+    return out
+
+
+# ---------------- decode step ----------------
+
+def _attn_decode_scan(params, cfg, x, pos, cache, prefix=""):
+    unit = moe_interleave(cfg)
+    gk = lambda k: f"{prefix}{k}" if prefix else k
+
+    if unit == 1:
+        windows = _window_arr(cfg, cfg.n_layers)
+        keys = ("lat", "rope") if cfg.mla else ("k", "v")
+        xs = ({k: cache[gk(k)] for k in keys}, windows, params["layers"])
+
+        def body(h, inp):
+            cl, w, lp = inp
+            h, new_cl = block_decode(lp, cfg, h, pos, cl, w,
+                                     moe_layer=bool(cfg.moe))
+            return h, new_cl
+
+        x, new_cache = jax.lax.scan(body, x, xs)
+        return x, {gk(k): v for k, v in new_cache.items()}
+
+    n_units = cfg.n_layers // unit
+    keys = ("lat", "rope") if cfg.mla else ("k", "v")
+    xs = ({k: cache[f"dense_{k}"] for k in keys},
+          {k: cache[f"moe_{k}"] for k in keys},
+          _window_arr(cfg, n_units, 0, unit), _window_arr(cfg, n_units, 1, unit),
+          params["layers"])
+
+    def body(h, inp):
+        cd, cm, wd, wm, lp = inp
+        h, ncd = block_decode(lp["dense"], cfg, h, pos, cd, wd, moe_layer=False)
+        h, ncm = block_decode(lp["moe"], cfg, h, pos, cm, wm, moe_layer=True)
+        return h, (ncd, ncm)
+
+    x, (nd, nm) = jax.lax.scan(body, x, xs)
+    out = {f"dense_{k}": v for k, v in nd.items()}
+    out |= {f"moe_{k}": v for k, v in nm.items()}
+    return x, out
+
+
+def _ssm_decode_scan(params, cfg, x, pos, cache):
+    from .transformer import _tree_slice, hybrid_segments
+
+    use_shared = cfg.family == "hybrid" and cfg.attn_every
+    attn_keys = ("lat", "rope") if cfg.mla else ("k", "v")
+
+    def seg_scan(lp_seg, conv_seg, ssm_seg, h):
+        def body(h, inp):
+            lp, conv, ssm = inp
+            hn = rms_norm(h, lp["norm"], cfg.norm_eps)
+            out, (nconv, nssm) = ssm_mod.mamba2_block(lp["mixer"], cfg, hn,
+                                                      state=(conv, ssm))
+            return h + out, (nconv, nssm)
+
+        h, (nconv, nssm) = jax.lax.scan(body, h, (lp_seg, conv_seg, ssm_seg))
+        return h, nconv, nssm
+
+    new_conv, new_ssm, new_attn = [], [], {k: [] for k in attn_keys}
+    for j, (a, b) in enumerate(hybrid_segments(cfg)):
+        if use_shared:
+            cl = {k: cache[f"attn_{k}"][j] for k in attn_keys}
+            x, ncl = block_decode(params["shared_attn"], cfg, x, pos, cl,
+                                  jnp.int32(-1), moe_layer=False)
+            for k in attn_keys:
+                new_attn[k].append(ncl[k])
+        x, nconv, nssm = seg_scan(_tree_slice(params["layers"], a, b),
+                                  cache["conv"][a:b], cache["ssm"][a:b], x)
+        new_conv.append(nconv)
+        new_ssm.append(nssm)
+    new_cache = {"conv": jnp.concatenate(new_conv),
+                 "ssm": jnp.concatenate(new_ssm)}
+    if use_shared:
+        for k in attn_keys:
+            new_cache[f"attn_{k}"] = jnp.stack(new_attn[k])
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, batch: dict):
+    """One token for every sequence. batch = {'tokens': [B, 1]}.
+
+    Returns (logits [B, vocab], new_cache with pos+1).
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    scale = jnp.sqrt(jnp.float32(cfg.d_model)).astype(jnp.bfloat16)
+    x = params["embed"][tokens] * scale
+    x = constrain(x, "batch", None, None)
+    pos = jnp.broadcast_to(cache["pos"], (B, 1))
+    if cfg.family in ("ssm", "hybrid"):
+        x, new_cache = _ssm_decode_scan(params, cfg, x, pos, cache)
+    else:
+        x, new_cache = _attn_decode_scan(params, cfg, x, pos, cache)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"]).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    new_cache["pos"] = cache["pos"] + 1
+    return constrain(logits[:, 0], "batch", "vocab"), new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, *, chunk=1024):
+    """Full-sequence forward for serving; returns last-position logits.
+
+    (Cache fill for mid-sequence restart is handled by replaying decode or by
+    examples/serve_lm.py's short-prompt path; the dry-run 'prefill' cells
+    lower this function.)
+    """
+    from .transformer import forward
+    logits = forward(params, cfg, batch, remat=False, chunk=chunk)
+    return logits[:, -1]

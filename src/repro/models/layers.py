@@ -1,0 +1,172 @@
+"""Shared neural layers: declarative params, RMSNorm, RoPE, GQA attention
+(global/local, softcap, bidirectional), chunked flash-style prefill, GeGLU.
+
+Params are declared as ParamSpec trees (one source of truth for shape,
+logical axes and init), so sharding rules and checkpointing never drift from
+the model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]     # logical axis names, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | ssm_dt | ssm_a
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_params(spec, key, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, p in zip(keys, leaves):
+        if p.init == "zeros":
+            v = jnp.zeros(p.shape, dtype)
+        elif p.init == "ones":
+            v = jnp.ones(p.shape, dtype)
+        elif p.init == "ssm_dt":
+            v = jnp.log(jnp.expm1(jax.random.uniform(k, p.shape, jnp.float32,
+                                                     0.001, 0.1))).astype(dtype)
+        elif p.init == "ssm_a":
+            v = jnp.log(jax.random.uniform(k, p.shape, jnp.float32, 1.0, 16.0)
+                        ).astype(dtype)
+        else:
+            fan_in = p.shape[0] if len(p.shape) > 1 else p.shape[-1]
+            v = (jax.random.normal(k, p.shape, jnp.float32)
+                 / math.sqrt(fan_in)).astype(dtype)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(spec):
+    return jax.tree.map(lambda p: p.axes, spec,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_params(spec, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------- primitives ----------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, D]; positions [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq       # [..., S, half]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _mask(qpos, kpos, *, causal: bool, window):
+    """[..., Sq, Sk] bool validity mask from absolute positions.
+
+    window may be None (global), a python int, or a traced scalar where
+    values <= 0 mean global (the per-layer local/global pattern rides
+    through lax.scan as an int array with -1 = global)."""
+    diff = qpos[..., :, None] - kpos[..., None, :]
+    m = jnp.ones(diff.shape, bool) if not causal else diff >= 0
+    if window is not None:
+        m &= jnp.where(window > 0, diff < window, True)
+    return m
+
+
+def attend(q, k, v, qpos, kpos, *, causal=True, window=None, softcap=None,
+           kv_valid=None, kt=None, vt=None):
+    """q [B,Sq,H,D]; k/v [B,Sk,G,D] (G kv heads, H % G == 0). fp32 softmax.
+
+    kt [B,G,D,Sk] / vt [B,G,Sk,Dv]: optional pre-transposed k/v so callers
+    looping over query chunks hoist the layout change out of the loop
+    (PERF: gemma2/train_4k iter 3 - XLA re-copied k/v per chunk trip).
+    """
+    B, Sq, H, D = q.shape
+    G = (k if k is not None else kt).shape[2 if kt is None else 1]
+    qg = q.reshape(B, Sq, G, H // G, D)
+    if kt is None:
+        kt = k.transpose(0, 2, 3, 1)
+    if vt is None:
+        vt = v.transpose(0, 2, 1, 3)
+    # Explicit f32 upcast: XLA-CPU cannot *execute* a raw bf16xbf16->f32 dot
+    # thunk in some fusion contexts (hybrid stacks hit it); on TPU the
+    # converts fold into the native mixed-precision MXU dot.
+    scores = jnp.einsum("bqghd,bgdk->bghqk", qg.astype(jnp.float32),
+                        kt.astype(jnp.float32))
+    scores = _softcap(scores / math.sqrt(D), softcap)
+    m = _mask(qpos, kpos, causal=causal, window=window)[:, None, None]
+    if kv_valid is not None:
+        m &= kv_valid[:, None, None, None, :]
+    scores = jnp.where(m, scores, -1e30)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bghqk,bgkd->bqghd", w.astype(vt.dtype), vt)
+    return out.reshape(B, Sq, H, vt.shape[-1])  # v head dim may differ (MLA)
+
+
+def chunked_attend(q, k, v, qpos, kpos, *, chunk=1024, **kw):
+    """Flash-style prefill: scan over query chunks so the score tile is
+    [B, H, chunk, Sk] instead of [B, H, S, S] (fits VMEM/HBM at 32k).
+
+    The chunk body is itself rematerialized (PERF: gemma2/train_4k iter 2) -
+    otherwise the backward saves every chunk's f32 score tile (the single
+    largest HBM stream in the whole train step); recomputing scores in the
+    chunk backward is the flash-attention trade and compute has headroom.
+    """
+    B, S, H, D = q.shape
+    if S <= chunk:
+        return attend(q, k, v, qpos, kpos, **kw)
+    assert S % chunk == 0, (S, chunk)
+    nq = S // chunk
+    qs = q.reshape(B, nq, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ps = qpos.reshape(B, nq, chunk).transpose(1, 0, 2)
+    kt = k.transpose(0, 2, 3, 1)     # hoisted out of the chunk loop
+    vt = v.transpose(0, 2, 1, 3)
+
+    @jax.checkpoint
+    def body(_, qc_pc):
+        qc, pc = qc_pc
+        return None, attend(qc, None, None, pc, kpos, kt=kt, vt=vt, **kw)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, vt.shape[-1])
+
+
+def geglu(x, w_gate, w_up, w_down, act: str = "silu"):
+    """Gated MLP: (act(x W_g) * (x W_u)) W_d."""
+    g = jnp.einsum("btd,df->btf", x, w_gate)
+    u = jnp.einsum("btd,df->btf", x, w_up)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("btf,fd->btd", a * u, w_down)
+
+
+def cross_entropy(logits, labels, vocab, softcap=None):
+    logits = _softcap(logits.astype(jnp.float32), softcap)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, vocab, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))

@@ -1,0 +1,88 @@
+"""DeepSeek-V2 Multi-head Latent Attention (arXiv:2405.04434).
+
+Queries and KV are projected through low-rank latents; only the kv_lora_rank
+latent (+ the shared rope key) is cached at decode time - the paper's KV-cache
+compression. Shapes follow the paper: per head qk = nope + rope dims, v has
+its own head dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MLAConfig, ModelConfig
+from .layers import ParamSpec, attend, chunked_attend, rms_norm, rope
+
+
+def mla_spec(cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "q_a": ParamSpec((d, m.q_lora_rank), ("embed", "lora")),
+        "q_a_norm": ParamSpec((m.q_lora_rank,), ("lora",), "zeros"),
+        "q_b": ParamSpec((m.q_lora_rank, H, qk), ("lora", "heads", None)),
+        "kv_a": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                          ("embed", "lora")),
+        "kv_a_norm": ParamSpec((m.kv_lora_rank,), ("lora",), "zeros"),
+        "kv_b": ParamSpec((m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+                          ("lora", "heads", None)),
+        "out": ParamSpec((H, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _project(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    q_lat = rms_norm(jnp.einsum("btd,dr->btr", x, p["q_a"]), p["q_a_norm"],
+                     cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", q_lat, p["q_b"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("btd,dr->btr", x, p["kv_a"])
+    kv_lat = rms_norm(kv[..., :m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = rope(kv[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, kv_lat, k_rope
+
+
+def _expand_kv(p, cfg: ModelConfig, kv_lat):
+    m = cfg.mla
+    kvb = jnp.einsum("btr,rhk->bthk", kv_lat, p["kv_b"])
+    return kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, *, chunk=1024):
+    """Full-sequence (train/prefill) MLA. x [B, S, d]."""
+    m = cfg.mla
+    q_nope, q_rope, kv_lat, k_rope = _project(p, cfg, x, positions)
+    k_nope, v = _expand_kv(p, cfg, kv_lat)
+    B, S, H, _ = q_nope.shape
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_rope.shape[:2] + (H, m.qk_rope_head_dim))], -1)
+    out = chunked_attend(q, k, v, positions, positions, chunk=chunk,
+                         causal=True, window=None, softcap=cfg.attn_softcap)
+    return jnp.einsum("bthv,hvd->btd", out, p["out"]), (kv_lat, k_rope[:, :, 0])
+
+
+def mla_decode(p, cfg: ModelConfig, x, pos, cache_lat, cache_rope, kv_valid):
+    """Single-token decode against the compressed latent cache.
+
+    cache_lat [B, S, r]; cache_rope [B, S, rope_dim]; x [B, 1, d].
+    """
+    m = cfg.mla
+    q_nope, q_rope, kv_lat, k_rope = _project(p, cfg, x, pos)
+    cache_lat = jax.lax.dynamic_update_slice_in_dim(
+        cache_lat, kv_lat.astype(cache_lat.dtype), pos[0, 0], axis=1)
+    cache_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache_rope, k_rope[:, :, 0].astype(cache_rope.dtype), pos[0, 0], axis=1)
+    k_nope, v = _expand_kv(p, cfg, cache_lat)
+    H = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([
+        k_nope,
+        jnp.broadcast_to(cache_rope[:, :, None],
+                         cache_rope.shape[:2] + (H, m.qk_rope_head_dim))], -1)
+    kpos = jnp.arange(k.shape[1])[None]
+    out = attend(q, k, v, pos, kpos, causal=True, window=None,
+                 softcap=cfg.attn_softcap, kv_valid=kv_valid)
+    return jnp.einsum("bthv,hvd->btd", out, p["out"]), cache_lat, cache_rope

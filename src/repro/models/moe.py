@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN with capacity-based einsum dispatch (MaxText-style).
+
+Tokens are routed top-k; dispatch/combine are one-hot einsums so the compiled
+FLOPs reflect active-expert compute only, and sharding the expert axis over
+'model' yields expert parallelism (XLA inserts the all-to-alls).
+
+`coded_dispatch` is the paper-bridge (DESIGN.md §4): the token->expert
+dispatch is a bipartite-graph shuffle; replicating token shards r=2x across
+adjacent EP groups enables the RB-model coded multicast. On TPU the win only
+materializes when dispatch bytes dominate expert FLOPs; we expose the mode
+for the benchmark harness to quantify, defaulting off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from .layers import ParamSpec, geglu
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    e: MoEConfig = cfg.moe
+    d = cfg.d_model
+    spec = {
+        "router": ParamSpec((d, e.num_experts), ("embed", "expert")),
+        "w_gate": ParamSpec((e.num_experts, d, e.d_ff_expert),
+                            ("expert", "embed", "mlp")),
+        "w_up": ParamSpec((e.num_experts, d, e.d_ff_expert),
+                          ("expert", "embed", "mlp")),
+        "w_down": ParamSpec((e.num_experts, e.d_ff_expert, d),
+                            ("expert", "mlp", "embed")),
+    }
+    if e.num_shared:
+        spec |= {
+            "shared_gate": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+            "shared_up": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+            "shared_down": ParamSpec((cfg.d_ff, d), ("mlp", "embed")),
+        }
+    return spec
+
+
+def _capacity(tokens: int, e: MoEConfig) -> int:
+    cap = int(tokens * e.top_k * e.capacity_factor / e.num_experts)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def moe_ffn(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x [B, S, d] -> [B, S, d]."""
+    e = cfg.moe
+    if e.ep:
+        from .moe_ep import moe_ffn_ep
+        return moe_ffn_ep(p, cfg, x)
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    topv, topi = jax.lax.top_k(gates, e.top_k)                  # [T, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(T, e)
+    # Position of each (token, k) inside its expert buffer.
+    onehot = jax.nn.one_hot(topi, e.num_experts, dtype=jnp.int32)  # [T,k,E]
+    flat = onehot.reshape(T * e.top_k, e.num_experts)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1                     # [T*k, E]
+    pos = pos.reshape(T, e.top_k, e.num_experts)
+    keep = (pos < C) & (pos >= 0)
+    # dispatch [T, E, C]: one-hot over the capacity slot.
+    slot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                          dtype=x.dtype)[..., :C]                 # [T,k,E,C]
+    dispatch = (slot * keep[..., None].astype(x.dtype)).sum(1)    # [T,E,C]
+    combine = (slot * (topv[..., None] * keep.astype(jnp.float32))[..., None]
+               ).sum(1).astype(jnp.float32)                       # [T,E,C]
+
+    xe = jnp.einsum("td,tec->ecd", xt, dispatch)                  # [E,C,d]
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+    yt = jnp.einsum("ecd,tec->td", ye.astype(jnp.float32), combine)
+
+    out = yt.astype(x.dtype).reshape(B, S, d)
+    if e.num_shared:
+        # Shared-expert hidden width is cfg.d_ff (= num_shared * per-expert
+        # width in the source configs), applied as one fused GeGLU.
+        out = out + geglu(x, p["shared_gate"], p["shared_up"], p["shared_down"],
+                          act=cfg.act)
+    return out
+
+
+def aux_load_balance_loss(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e."""
+    e = cfg.moe
+    xt = x.reshape(-1, x.shape[-1])
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32), -1)
+    top1 = jnp.argmax(gates, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, e.num_experts, dtype=jnp.float32), 0)
+    P = jnp.mean(gates, axis=0)
+    return e.num_experts * jnp.sum(f * P)

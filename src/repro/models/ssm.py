@@ -1,0 +1,150 @@
+"""Mamba2 block (SSD, arXiv:2405.21060) - prefill via the chunked dual form,
+decode via O(1) state update. The Pallas kernel (kernels/ssd_scan) is the TPU
+hot path; the model default is the mathematically identical pure-jnp chunked
+form so dry-run HLO stays representative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from .layers import ParamSpec, rms_norm
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    return {
+        # in_proj -> [x (di), z gate (di), B (N), C (N), dt (nh)]
+        "in_proj": ParamSpec((d, 2 * di + 2 * s.d_state + nh), ("embed", "inner")),
+        "conv_w": ParamSpec((s.conv_width, di + 2 * s.d_state), (None, "inner")),
+        "dt_bias": ParamSpec((nh,), ("heads",), "ssm_dt"),
+        "a_log": ParamSpec((nh,), ("heads",), "ssm_a"),
+        "d_skip": ParamSpec((nh,), ("heads",), "ones"),
+        "out_norm": ParamSpec((di,), ("inner",), "zeros"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _split(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    x, z, B, C, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1)
+    return x, z, B, C, dt, di, nh
+
+
+def _causal_conv(u, w, state=None):
+    """u [B, S, D]; w [W, D] depthwise. Returns (out, new_state [B, W-1, D])."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    padded = jnp.concatenate([state, u], axis=1)
+    out = sum(padded[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out), padded[:, -(W - 1):]
+
+
+def _ssd_chunked_jnp(x, dt, A, B, C, D, h0, chunk):
+    """Vectorized chunked SSD (same math as kernels/ssd_scan)."""
+    g, L, p = x.shape
+    n = B.shape[-1]
+    ch = L // chunk
+    xr = x.reshape(g, ch, chunk, p).astype(jnp.float32)
+    dtr = dt.reshape(g, ch, chunk).astype(jnp.float32)
+    br = B.reshape(g, ch, chunk, n).astype(jnp.float32)
+    cr = C.reshape(g, ch, chunk, n).astype(jnp.float32)
+    dta = dtr * A[:, None, None].astype(jnp.float32)
+    cum = jnp.cumsum(dta, axis=-1)
+    scores = jnp.einsum("gctn,gcsn->gcts", cr, br)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # Mask inside the exp: the upper triangle would overflow (positive
+    # exponents) and poison the backward pass via inf * 0.
+    diff = cum[..., :, None] - cum[..., None, :]
+    decay = jnp.exp(jnp.where(tri, diff, -1e30))
+    m = scores * decay * dtr[..., None, :]
+    y_intra = jnp.einsum("gcts,gcsp->gctp", m, xr)
+    w = jnp.exp(cum[..., -1:] - cum) * dtr
+    S = jnp.einsum("gctn,gctp->gcnp", br * w[..., None], xr)
+    G = jnp.exp(cum[..., -1])
+    Cexp = cr * jnp.exp(cum)[..., None]
+
+    def combine(a, b):
+        ga, sa = a
+        gb, sb = b
+        return ga * gb, gb[..., None, None] * sa + sb
+
+    Gs, Ss = jax.lax.associative_scan(combine, (G, S), axis=1)
+    h0 = jnp.zeros((g, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_in = jnp.concatenate(
+        [h0[:, None], Gs[:, :-1, None, None] * h0[:, None] + Ss[:, :-1]], axis=1)
+    y_inter = jnp.einsum("gctn,gcnp->gctp", Cexp, h_in)
+    y = (y_intra + y_inter).reshape(g, L, p) + D[:, None, None] * x
+    h_final = Gs[:, -1, None, None] * h0 + Ss[:, -1]
+    return y, h_final
+
+
+def mamba2_block(p, cfg: ModelConfig, u, *, state=None, use_kernel=False):
+    """u [B, S, d_model] -> (y, (conv_state, ssm_state)).
+
+    state: None for train, or (conv_state [B,W-1,di+2N], ssm_state [B,nh,N,P]).
+    """
+    s = cfg.ssm
+    proj = jnp.einsum("btd,de->bte", u, p["in_proj"])
+    x, z, B_, C_, dt, di, nh = _split(cfg, proj)
+    conv_in = jnp.concatenate([x, B_, C_], axis=-1)
+    conv_state = None if state is None else state[0]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    x, B_, C_ = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+
+    Bsz, S, _ = u.shape
+    P = s.head_dim
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))   # [B,S,nh]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                    # [nh]
+    xh = x.reshape(Bsz, S, nh, P)
+
+    # Flatten (batch, head) into the scan group axis.
+    xg = xh.transpose(0, 2, 1, 3).reshape(Bsz * nh, S, P)
+    dtg = dt_full.transpose(0, 2, 1).reshape(Bsz * nh, S)
+    Bg = jnp.broadcast_to(B_[:, None], (Bsz, nh, S, s.d_state)).reshape(
+        Bsz * nh, S, s.d_state)
+    Cg = jnp.broadcast_to(C_[:, None], (Bsz, nh, S, s.d_state)).reshape(
+        Bsz * nh, S, s.d_state)
+    Ag = jnp.tile(A, Bsz)
+    Dg = jnp.tile(p["d_skip"].astype(jnp.float32), Bsz)
+    h0 = None if state is None else state[1].reshape(Bsz * nh, s.d_state, P)
+
+    if S == 1:                                   # decode: O(1) state update
+        from ..kernels.ssd_scan.ops import ssd_decode_step
+        if h0 is None:
+            h0 = jnp.zeros((Bsz * nh, s.d_state, P), jnp.float32)
+        y1, hT = ssd_decode_step(xg[:, 0].astype(jnp.float32), dtg[:, 0], Ag,
+                                 Bg[:, 0].astype(jnp.float32),
+                                 Cg[:, 0].astype(jnp.float32), Dg, h0)
+        yg = y1[:, None]
+    elif use_kernel:
+        from ..kernels.ssd_scan.ops import ssd
+        yg, hT = ssd(xg, dtg, Ag, Bg, Cg, Dg, h0, chunk=s.chunk)
+    else:
+        yg, hT = _ssd_chunked_jnp(xg.astype(jnp.float32), dtg, Ag,
+                                  Bg.astype(jnp.float32),
+                                  Cg.astype(jnp.float32), Dg, h0, s.chunk)
+
+    y = yg.reshape(Bsz, nh, S, P).transpose(0, 2, 1, 3).reshape(Bsz, S, di)
+    y = rms_norm(y.astype(u.dtype) * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    new_ssm = hT.reshape(Bsz, nh, s.d_state, P)
+    return out, (new_conv, new_ssm)
+
+
+def empty_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv = jnp.zeros((batch, s.conv_width - 1, di + 2 * s.d_state), dtype)
+    ssm = jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32)
+    return conv, ssm

@@ -1,0 +1,336 @@
+"""Composable model assembly: param specs, scan-over-layers forward passes
+(train / prefill / decode) for every assigned architecture family.
+
+Layer stacks are jax.lax.scan over stacked params (HLO size O(1) in depth).
+Per-layer attention flavor (local/global window) rides along as a traced
+int array; heterogeneous stacks (llama4's dense/MoE interleave, zamba2's
+shared-attention insertion) are expressed as multi-block scan units and
+lax.cond respectively.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import constrain
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (ParamSpec, attend, chunked_attend, cross_entropy, geglu,
+                     rms_norm, rope)
+
+
+# ---------------- param specs ----------------
+
+def attn_spec(cfg: ModelConfig) -> dict:
+    d, H, G, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "q": ParamSpec((d, H, Dh), ("embed", "heads", None)),
+        "k": ParamSpec((d, G, Dh), ("embed", "kv_heads", None)),
+        "v": ParamSpec((d, G, Dh), ("embed", "kv_heads", None)),
+        "o": ParamSpec((H, Dh, d), ("heads", None, "embed")),
+    }
+
+
+def dense_ffn_spec(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def block_spec(cfg: ModelConfig, *, moe_layer: bool) -> dict:
+    spec: dict = {"attn_norm": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+                  "ffn_norm": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+    spec["attn"] = mla_mod.mla_spec(cfg) if cfg.mla else attn_spec(cfg)
+    spec["ffn"] = moe_mod.moe_spec(cfg) if moe_layer else dense_ffn_spec(cfg)
+    return spec
+
+
+def ssm_block_spec(cfg: ModelConfig) -> dict:
+    return {"norm": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+            "mixer": ssm_mod.ssm_spec(cfg)}
+
+
+def _stacked(spec, L: int):
+    return jax.tree.map(
+        lambda p: ParamSpec((L,) + p.shape, ("layers",) + p.axes, p.init),
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def moe_interleave(cfg: ModelConfig) -> int:
+    """Layers per scan unit (llama4: dense/MoE alternation -> 2)."""
+    return cfg.moe_every if cfg.moe else 1
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    spec: dict = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed")),
+        "final_norm": ParamSpec((d,), ("embed",), "zeros"),
+    }
+    if cfg.family in ("ssm", "hybrid"):
+        spec["layers"] = _stacked(ssm_block_spec(cfg), cfg.n_layers)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            shared = block_spec(cfg, moe_layer=False)
+            spec["shared_attn"] = shared
+    else:
+        unit = moe_interleave(cfg)
+        n_units = cfg.n_layers // unit
+        if unit == 1:
+            spec["layers"] = _stacked(block_spec(cfg, moe_layer=bool(cfg.moe)),
+                                      n_units)
+        else:
+            spec["layers"] = {
+                "dense": _stacked(block_spec(cfg, moe_layer=False), n_units),
+                "moe": _stacked(block_spec(cfg, moe_layer=True), n_units),
+            }
+    if cfg.frontend == "vision":
+        spec["patch_proj"] = ParamSpec((d, d), ("embed", None))
+    if cfg.frontend == "audio":
+        spec["frame_proj"] = ParamSpec((d, d), ("embed", None))
+    return spec
+
+
+# ---------------- attention block ----------------
+
+def _window_arr(cfg: ModelConfig, n: int, offset: int = 0, stride: int = 1):
+    kinds = cfg.layer_kinds()
+    return jnp.array([cfg.window if kinds[offset + i * stride] == "local" else -1
+                      for i in range(n)], jnp.int32)
+
+
+def gqa_forward(p, cfg: ModelConfig, x, positions, window, *, chunk=1024):
+    """Train/prefill attention. window: traced scalar (-1 = global).
+
+    Activation sharding picks head-parallel attention when head counts divide
+    the tensor axis, else kv-sequence-parallel (ragged-head archs: llama4's
+    40H, internvl2's 14H) - XLA then computes the softmax over a sharded key
+    axis with partial reductions instead of replicating a [*, S, S] tile.
+    """
+    from ..sharding.rules import tp_size
+    q = jnp.einsum("btd,dhk->bthk", x, p["q"])
+    k = jnp.einsum("btd,dgk->btgk", x, p["k"])
+    v = jnp.einsum("btd,dgk->btgk", x, p["v"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    tp = tp_size()
+    if cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0:
+        q = constrain(q, "batch", None, "act_heads", None)
+        k = constrain(k, "batch", None, "act_kv", None)
+        v = constrain(v, "batch", None, "act_kv", None)
+    else:
+        k = constrain(k, "batch", "act_seq_tp", None, None)
+        v = constrain(v, "batch", "act_seq_tp", None, None)
+    out = chunked_attend(q, k, v, positions, positions, chunk=chunk,
+                         causal=not cfg.encoder_only, window=window,
+                         softcap=cfg.attn_softcap)
+    return jnp.einsum("bthk,hkd->btd", out, p["o"]), (k, v)
+
+
+def gqa_decode(p, cfg: ModelConfig, x, pos, cache_k, cache_v, window):
+    """x [B,1,d]; cache_k/v [B,Smax,G,Dh]; pos [B,1] current position."""
+    q = rope(jnp.einsum("btd,dhk->bthk", x, p["q"]), pos, cfg.rope_theta)
+    k = rope(jnp.einsum("btd,dgk->btgk", x, p["k"]), pos, cfg.rope_theta)
+    v = jnp.einsum("btd,dgk->btgk", x, p["v"])
+    t = pos[0, 0]
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), t, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), t, 1)
+    kpos = jnp.arange(cache_k.shape[1])[None]
+    kv_valid = kpos <= t
+    out = attend(q, cache_k, cache_v, pos, kpos, causal=True,
+                 window=window, softcap=cfg.attn_softcap, kv_valid=kv_valid)
+    return jnp.einsum("bthk,hkd->btd", out, p["o"]), cache_k, cache_v
+
+
+def _ffn(p, cfg: ModelConfig, x, *, moe_layer: bool):
+    if moe_layer:
+        return moe_mod.moe_ffn(p, cfg, x)
+    return geglu(x, p["w_gate"], p["w_up"], p["w_down"], act=cfg.act)
+
+
+def block_forward(p, cfg, x, positions, window, *, moe_layer, chunk=1024):
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if cfg.mla:
+        attn_out, kv = mla_mod.mla_attention(p["attn"], cfg, h, positions,
+                                             chunk=chunk)
+    else:
+        attn_out, kv = gqa_forward(p["attn"], cfg, h, positions, window,
+                                   chunk=chunk)
+    x = x + attn_out
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    x = x + _ffn(p["ffn"], cfg, h, moe_layer=moe_layer)
+    return constrain(x, "batch", None, None), kv
+
+
+def block_decode(p, cfg, x, pos, cache, window, *, moe_layer):
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if cfg.mla:
+        attn_out, lat, rp = mla_mod.mla_decode(
+            p["attn"], cfg, h, pos, cache["lat"], cache["rope"],
+            kv_valid=jnp.arange(cache["lat"].shape[1])[None] <= pos[0, 0])
+        new_cache = {"lat": lat, "rope": rp}
+    else:
+        attn_out, ck, cv = gqa_decode(p["attn"], cfg, h, pos,
+                                      cache["k"], cache["v"], window)
+        new_cache = {"k": ck, "v": cv}
+    x = x + attn_out.astype(x.dtype)   # cache dtype may differ (f32 serving)
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    x = x + _ffn(p["ffn"], cfg, h, moe_layer=moe_layer)
+    return x, new_cache
+
+
+# ---------------- stacks ----------------
+
+def _attn_stack(params, cfg: ModelConfig, x, positions, *, remat: bool,
+                chunk=1024):
+    unit = moe_interleave(cfg)
+    # PERF (EXPERIMENTS.md SSPerf, gemma2/train_4k iter 1): carry the scan
+    # residual in f32 when remat is on. jax.checkpoint saves the carry per
+    # trip; with a bf16 carry XLA wraps the saved-activation stack in a
+    # full-stack bf16<->f32 convert sandwich *every layer trip* (~2.9GB/trip
+    # for gemma2) because the backward consumers are f32. An f32 carry costs
+    # one extra 2x slice write per trip and removes the sandwich.
+    carry_t = jnp.float32 if remat else x.dtype
+    model_t = x.dtype
+
+    def wrap(body):
+        def wrapped(h, inp):
+            h, ys = body(h.astype(model_t), inp)
+            return h.astype(carry_t), ys
+        return jax.checkpoint(wrapped) if remat else wrapped
+
+    if unit == 1:
+        windows = _window_arr(cfg, cfg.n_layers)
+
+        def body(h, inp):
+            lp, w = inp
+            h, _ = block_forward(lp, cfg, h, positions, w,
+                                 moe_layer=bool(cfg.moe), chunk=chunk)
+            return h, None
+
+        x, _ = jax.lax.scan(wrap(body), x.astype(carry_t),
+                            (params["layers"], windows))
+        return x.astype(model_t)
+
+    n_units = cfg.n_layers // unit
+    w_dense = _window_arr(cfg, n_units, 0, unit)
+    w_moe = _window_arr(cfg, n_units, 1, unit)
+
+    def body(h, inp):
+        lp, wd, wm = inp
+        h, _ = block_forward(lp["dense"], cfg, h, positions, wd,
+                             moe_layer=False, chunk=chunk)
+        h, _ = block_forward(lp["moe"], cfg, h, positions, wm,
+                             moe_layer=True, chunk=chunk)
+        return h, None
+
+    x, _ = jax.lax.scan(wrap(body), x.astype(carry_t),
+                        (params["layers"], w_dense, w_moe))
+    return x.astype(model_t)
+
+
+def hybrid_segments(cfg: ModelConfig) -> list[tuple[int, int]]:
+    """Layer ranges between shared-attention insertion points (zamba2):
+    the shared block runs *before* each segment of attn_every ssm layers."""
+    if cfg.family != "hybrid" or not cfg.attn_every:
+        return [(0, cfg.n_layers)]
+    return [(s, min(s + cfg.attn_every, cfg.n_layers))
+            for s in range(0, cfg.n_layers, cfg.attn_every)]
+
+
+def _tree_slice(tree, a: int, b: int):
+    return jax.tree.map(lambda v: v[a:b], tree)
+
+
+def _ssm_stack(params, cfg: ModelConfig, x, positions, *, remat: bool,
+               chunk=1024):
+    use_shared = cfg.family == "hybrid" and cfg.attn_every
+
+    def seg_scan(lp_seg, h):
+        def body(h, lp):
+            hn = rms_norm(h, lp["norm"], cfg.norm_eps)
+            out, _ = ssm_mod.mamba2_block(lp["mixer"], cfg, hn)
+            return h + out, None
+
+        f = jax.checkpoint(body) if remat else body
+        h, _ = jax.lax.scan(f, h, lp_seg)
+        return h
+
+    for a, b in hybrid_segments(cfg):
+        if use_shared:
+            x, _ = block_forward(params["shared_attn"], cfg, x, positions,
+                                 jnp.int32(-1), moe_layer=False, chunk=chunk)
+        x = seg_scan(_tree_slice(params["layers"], a, b), x)
+    return x
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    scale = jnp.sqrt(jnp.float32(cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.frontend == "audio":
+        x = jnp.einsum("btd,de->bte", batch["frames"], params["frame_proj"])
+    elif cfg.frontend == "vision":
+        pe = jnp.einsum("bpd,de->bpe", batch["patches"], params["patch_proj"])
+        te = params["embed"][batch["tokens"]] * scale
+        x = jnp.concatenate([pe, te.astype(pe.dtype)], axis=1)
+    else:
+        x = params["embed"][batch["tokens"]] * scale
+    return constrain(x, "batch", None, None)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: dict, *, remat=False,
+                   chunk=1024):
+    """Embed + stack + final norm -> hidden [B, S, d] (no logits)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    stack = _ssm_stack if cfg.family in ("ssm", "hybrid") else _attn_stack
+    x = stack(params, cfg, x, positions, remat=remat, chunk=chunk)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, remat=False, chunk=1024):
+    """Full-sequence forward -> logits [B, S, vocab] (fp32)."""
+    x = forward_hidden(params, cfg, batch, remat=remat, chunk=chunk)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"])
+    return constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+def _chunked_ce(x, embed, labels, vocab, softcap, *, seq_chunk=512):
+    """CE over sequence chunks so the f32 logits tensor (B*S*vocab, the
+    largest activation for 256k vocabs) is never materialized whole
+    (PERF: gemma2/train_4k iter 4). Chunk body is rematerialized."""
+    from .layers import cross_entropy
+    B, S, d = x.shape
+    if S % seq_chunk:
+        seq_chunk = S                      # ragged: fall back to one chunk
+    n = S // seq_chunk
+    xs = x.reshape(B, n, seq_chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, seq_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, lc = inp
+        logits = jnp.einsum("btd,vd->btv", xc, embed)
+        return acc + cross_entropy(logits, lc, vocab, softcap), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return tot / n
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, remat=True, chunk=1024):
+    x = forward_hidden(params, cfg, batch, remat=remat, chunk=chunk)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":            # loss on text positions only
+        x = x[:, cfg.num_patches:]
+    if not cfg.encoder_only and cfg.frontend != "audio":
+        x, labels = x[:, :-1], labels[:, 1:]
+    return _chunked_ce(x, params["embed"], labels, cfg.vocab,
+                       cfg.logit_softcap)

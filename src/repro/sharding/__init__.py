@@ -1,0 +1,2 @@
+from .rules import (LOGICAL_RULES, activation_sharding, constrain,  # noqa: F401
+                    param_shardings, set_mesh)

@@ -1,0 +1,127 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, with fallbacks).
+
+Params carry logical axis names (layers/embed/heads/mlp/expert/vocab/...);
+rules map them to mesh axes with divisibility-checked fallback chains, so one
+rule set serves every architecture (e.g. internvl2's 14 heads can't split 16
+ways -> attention falls back to replicated-heads + fsdp'd embed).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Fallback chain per logical axis: first mesh axis (or tuple) that divides the
+# dimension wins; None = replicate.
+LOGICAL_RULES: dict[str, tuple] = {
+    "embed": (("pod", "data"), "data", None),
+    "vocab": ("model", None),
+    "heads": ("model", None),
+    "kv_heads": ("model", None),
+    "mlp": ("model", None),
+    # PERF (EXPERIMENTS.md SSPerf, llama4/train_4k, iter 1 - REFUTED):
+    # sharding experts over 'data' (expert parallelism) made collectives
+    # *worse* (+15%) and doubled compute: with einsum-based dispatch XLA
+    # all-gathers the token axis instead of emitting a token all-to-all.
+    # Proper EP needs an explicit shard_map dispatch; until then experts
+    # ride 'model' and FSDP's embed sharding.
+    "expert": ("model", None),
+    "inner": ("model", None),       # ssm d_inner
+    "lora": (None,),
+    "layers": (None,),
+    "state": (None,),
+    # activations
+    "batch": (("pod", "data"), "data", None),
+    "act_seq": ("data", None),      # sequence sharding (long-context cache)
+    "act_seq_tp": ("model", None),  # kv-seq over tensor axis (ragged-head archs)
+    "act_heads": ("model", None),
+    "act_kv": ("model", None),
+}
+
+_ctx = threading.local()
+
+
+def set_mesh(mesh: Mesh | None):
+    _ctx.mesh = mesh
+
+
+def _mesh() -> Mesh | None:
+    return getattr(_ctx, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    set_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(None)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape.get(a, 1)
+        return size
+    return mesh.shape.get(axis, 1)
+
+
+def _resolve(mesh: Mesh, logical: str | None, dim: int):
+    """First candidate mesh axis that exists and divides `dim`."""
+    if logical is None:
+        return None
+    for cand in LOGICAL_RULES.get(logical, (None,)):
+        if cand is None:
+            return None
+        axes = cand if isinstance(cand, tuple) else (cand,)
+        if all(a in mesh.shape for a in axes) and dim % _axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def spec_for(mesh: Mesh, axes: tuple, shape: tuple[int, ...]) -> P:
+    used: set = set()
+    out = []
+    for logical, dim in zip(axes, shape):
+        m = _resolve(mesh, logical, dim)
+        flat = tuple(m) if isinstance(m, tuple) else ((m,) if m else ())
+        if any(a in used for a in flat):
+            m = None                      # one mesh axis shards one dim only
+        used.update(flat)
+        out.append(m)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, axes_tree, shapes_tree):
+    """NamedSharding tree matching the params tree."""
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(mesh, spec_for(mesh, ax, sh.shape)),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def activation_sharding(mesh: Mesh, axes: tuple, shape: tuple[int, ...]):
+    return NamedSharding(mesh, spec_for(mesh, axes, shape))
+
+
+def constrain(x: jnp.ndarray, *axes: str | None) -> jnp.ndarray:
+    """Sharding-constrain an activation by logical axes; no-op without mesh."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(mesh, axes, x.shape)))
+
+
+def tp_size() -> int:
+    """Tensor-parallel degree of the active mesh (1 without a mesh)."""
+    mesh = _mesh()
+    return mesh.shape.get("model", 1) if mesh is not None else 1

@@ -1,0 +1,46 @@
+"""jit-able train_step: loss + grad + AdamW update, with optional gradient
+accumulation over microbatches (lax.scan so HLO stays O(1) in accum steps)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import transformer as tfm
+from .optimizer import AdamWConfig, apply_updates
+
+
+def train_step(params, opt_state, batch, *, cfg: ModelConfig,
+               opt: AdamWConfig, accum: int = 1, chunk: int = 1024):
+    """batch leaves have leading [global_batch, ...]; accum splits it."""
+
+    def loss_of(p, b):
+        return tfm.loss_fn(p, cfg, b, remat=True, chunk=chunk)
+
+    if accum == 1:
+        loss, grads = jax.value_and_grad(loss_of)(params, batch)
+    else:
+        def resh(x):
+            return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+        micro = jax.tree.map(resh, batch)
+
+        def body(acc, mb):
+            l, g = jax.value_and_grad(loss_of)(params, mb)
+            return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g)), None
+
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss, grads), _ = jax.lax.scan(body, zero, micro)
+        loss = loss / accum
+        grads = jax.tree.map(lambda g: g / accum, grads)
+
+    new_params, new_state = apply_updates(opt, params, grads, opt_state)
+    return new_params, new_state, loss
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, accum: int = 1,
+                    chunk: int = 1024, donate: bool = True):
+    f = functools.partial(train_step, cfg=cfg, opt=opt, accum=accum, chunk=chunk)
+    return jax.jit(f, donate_argnums=(0, 1) if donate else ())

@@ -1,0 +1,121 @@
+"""Bit-exactness and load-accounting tests for the coded Shuffle (paper §IV)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as algo
+from repro.core import graph_models as gm
+from repro.core.allocation import divisible_n, er_allocation
+from repro.core.bitcodec import (T_BITS, bits_to_floats, floats_to_bits,
+                                 segment_bounds)
+from repro.core.coded_shuffle import coded_load, run_coded
+from repro.core.uncoded_shuffle import missing_pairs, run_uncoded, uncoded_load
+
+
+def _values(g):
+    """Deterministic distinct float32 values on the edges."""
+    rng = np.random.default_rng(7)
+    v = rng.standard_normal((g.n, g.n)).astype(np.float32)
+    return np.where(g.adj, v, 0.0).astype(np.float32)
+
+
+@pytest.mark.parametrize("K,r", [(4, 1), (4, 2), (4, 3), (5, 2), (5, 3), (5, 4), (6, 2)])
+def test_coded_recovers_every_missing_value_bit_exact(K, r):
+    n = divisible_n(50, K, r)
+    g = gm.erdos_renyi(n, 0.25, seed=K * 10 + r)
+    alloc = er_allocation(n, K, r)
+    vals = _values(g)
+    coded = run_coded(g.adj, vals, alloc)
+    for k in range(K):
+        for i, j in missing_pairs(g.adj, alloc, k):
+            got = coded.delivered[k].get((int(i), int(j)))
+            assert got is not None, f"({i},{j}) not delivered to {k}"
+            # Bit-exact: float equality, not allclose.
+            assert np.float32(got) == vals[i, j]
+
+
+@pytest.mark.parametrize("K,r", [(5, 2), (5, 3), (6, 3)])
+def test_coded_load_matches_bits_actually_sent(K, r):
+    n = divisible_n(40, K, r)
+    g = gm.erdos_renyi(n, 0.3, seed=1)
+    alloc = er_allocation(n, K, r)
+    coded = run_coded(g.adj, _values(g), alloc)
+    # coded_load() is the schedule-only accounting; the executed shuffle plus
+    # (empty here) leftovers must send exactly those bits.
+    assert coded.bits_sent == round(coded_load(g.adj, alloc) * n * n * T_BITS)
+
+
+@pytest.mark.parametrize("r", [2, 3, 4])
+def test_inverse_linear_gain(r):
+    """The heart of Theorem 1: coded load ~ uncoded load / r."""
+    K = 5
+    n = divisible_n(300, K, r)
+    g = gm.erdos_renyi(n, 0.1, seed=42)
+    alloc = er_allocation(n, K, r)
+    lu = uncoded_load(g.adj, alloc)
+    lc = coded_load(g.adj, alloc)
+    gain = lu / lc
+    # Finite-n: gain within 20% of r (paper Fig. 5 shows near-r at n=300).
+    assert gain > 0.8 * r, f"gain {gain:.2f} vs r={r}"
+    assert gain <= r * 1.05 + 1e-9
+
+
+def test_r_equals_K_needs_no_communication():
+    K = 4
+    n = divisible_n(24, K, K)
+    g = gm.erdos_renyi(n, 0.5, seed=0)
+    alloc = er_allocation(n, K, K)
+    assert uncoded_load(g.adj, alloc) == 0.0
+    assert coded_load(g.adj, alloc) == 0.0
+
+
+def test_uncoded_delivers_exactly_the_missing_set():
+    n = divisible_n(40, 4, 2)
+    g = gm.erdos_renyi(n, 0.3, seed=2)
+    alloc = er_allocation(n, 4, 2)
+    vals = _values(g)
+    res = run_uncoded(g.adj, vals, alloc)
+    for k in range(4):
+        pairs = {tuple(map(int, p)) for p in missing_pairs(g.adj, alloc, k)}
+        assert set(res.delivered[k].keys()) == pairs
+    assert res.bits_sent == sum(
+        len(missing_pairs(g.adj, alloc, k)) for k in range(4)) * T_BITS
+
+
+def test_groups_partition_the_missing_set():
+    """Every missing (i, j) is covered by exactly one (r+1)-group."""
+    from repro.core.coded_shuffle import group_need
+
+    K, r = 5, 2
+    n = divisible_n(60, K, r)
+    g = gm.erdos_renyi(n, 0.2, seed=3)
+    alloc = er_allocation(n, K, r)
+    seen: dict = {}
+    for S in itertools.combinations(range(K), r + 1):
+        for k in S:
+            for i, j in group_need(g.adj, alloc, S, k):
+                key = (k, int(i), int(j))
+                assert key not in seen, f"{key} covered twice ({seen[key]}, {S})"
+                seen[key] = S
+    want = {(k, int(i), int(j))
+            for k in range(K) for i, j in missing_pairs(g.adj, alloc, k)}
+    assert set(seen) == want
+
+
+# ---- bitcodec ----
+
+def test_bitcodec_roundtrip():
+    x = np.array([0.0, -0.0, 1.5, -3.25e-12, np.inf, 7e37], dtype=np.float32)
+    assert (bits_to_floats(floats_to_bits(x)).view(np.uint32)
+            == x.view(np.uint32)).all()
+
+
+@pytest.mark.parametrize("r", range(1, 9))
+def test_segment_bounds_cover_exactly(r):
+    bounds = segment_bounds(r)
+    assert bounds[0][0] == 0 and bounds[-1][1] == T_BITS
+    for (a, b), (c, d) in zip(bounds, bounds[1:]):
+        assert b == c and b > a
+    widths = [b - a for a, b in bounds]
+    assert max(widths) - min(widths) <= 1

@@ -1,0 +1,51 @@
+"""Integration: the dry-run machinery end-to-end on small/fast cells.
+
+Runs in subprocesses so the 512-placeholder-device XLA flag never leaks into
+this test session (smoke tests must see 1 device). The full 80-cell sweep is
+exercised by `launch/dryrun.py --all` (see dryrun_results_*.json); here we
+pin one representative cell per step-kind.
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_cell(arch, shape, extra=()):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, *extra]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    line = proc.stdout.strip().splitlines()[-1]
+    return json.loads(line), proc
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("mamba2-370m", "long_500k"),      # decode / SSM / long-context
+    ("internvl2-1b", "train_4k"),      # train / vlm frontend stub
+])
+def test_dryrun_cell_compiles_with_roofline(arch, shape):
+    res, proc = _run_cell(arch, shape)
+    assert res["status"] == "ok", proc.stderr[-1500:]
+    assert res["chips"] == 256
+    for key in ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+                "roofline_fraction", "coll_breakdown"):
+        assert key in res
+    assert res["flops_per_device"] > 0
+    assert res["bytes_per_device"] > 0
+
+
+def test_dryrun_multi_pod_mesh():
+    res, proc = _run_cell("mamba2-370m", "decode_32k", ("--multi-pod",))
+    assert res["status"] == "ok", proc.stderr[-1500:]
+    assert res["chips"] == 512
+
+
+def test_dryrun_skip_cells_report_reason():
+    res, _ = _run_cell("gemma-7b", "long_500k")
+    assert res["status"] == "skip"
+    assert "sub-quadratic" in res["reason"]
+    res, _ = _run_cell("hubert-xlarge", "decode_32k")
+    assert res["status"] == "skip"
+    assert "encoder-only" in res["reason"]

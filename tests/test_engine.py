@@ -1,0 +1,93 @@
+"""Engine correctness: every mode must equal the single-machine oracle."""
+import numpy as np
+import pytest
+
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core import graph_models as gm
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation)
+
+PROGRAMS = [algo.pagerank(), algo.sssp(0), algo.connected_components(),
+            algo.degree_count()]
+
+
+@pytest.mark.parametrize("prog", PROGRAMS, ids=lambda p: p.name)
+@pytest.mark.parametrize("mode", ["uncoded", "coded", "coded-fast"])
+def test_engine_matches_oracle_er(prog, mode):
+    K, r = 5, 2
+    n = divisible_n(50, K, r)
+    g = gm.erdos_renyi(n, 0.2, seed=11)
+    alloc = er_allocation(n, K, r)
+    ref = algo.reference_run(prog, g, 4)
+    res = engine.run(prog, g, alloc, 4, mode=mode)
+    np.testing.assert_array_equal(res.state, ref)
+
+
+@pytest.mark.parametrize("model,kw", [
+    ("rb", dict(n1=48, n2=24, q=0.3)),
+    ("sbm", dict(n1=48, n2=24, p=0.25, q=0.1)),
+])
+def test_engine_matches_oracle_two_cluster(model, kw):
+    g = gm.sample(model, seed=5, **kw)
+    alloc = bipartite_allocation(48, 24, 6, 2)
+    prog = algo.pagerank()
+    ref = algo.reference_run(prog, g, 3)
+    for mode in ["uncoded", "coded"]:
+        res = engine.run(prog, g, alloc, 3, mode=mode)
+        np.testing.assert_array_equal(res.state, ref)
+
+
+def test_engine_matches_oracle_power_law():
+    n = divisible_n(60, 5, 2)
+    g = gm.power_law(n, 2.5, seed=9)
+    alloc = er_allocation(n, 5, 2)
+    prog = algo.pagerank()
+    ref = algo.reference_run(prog, g, 3)
+    res = engine.run(prog, g, alloc, 3, mode="coded")
+    np.testing.assert_array_equal(res.state, ref)
+
+
+def test_coded_never_sends_more_than_uncoded():
+    for seed in range(3):
+        n = divisible_n(60, 5, 3)
+        g = gm.erdos_renyi(n, 0.15, seed=seed)
+        alloc = er_allocation(n, 5, 3)
+        prog = algo.pagerank()
+        lu = engine.run(prog, g, alloc, 1, "uncoded").shuffle_bits
+        lc = engine.run(prog, g, alloc, 1, "coded").shuffle_bits
+        assert lc <= lu
+
+
+def test_pagerank_mass_conserved_and_converges():
+    g = gm.erdos_renyi(60, 0.3, seed=1)
+    alloc = er_allocation(60, 5, 2)
+    prog = algo.pagerank(damping=0.15)
+    res = engine.run(prog, g, alloc, 50, mode="coded-fast")
+    # Stationary: one more iteration moves nothing (to fp32 tolerance).
+    res2 = engine.run(prog, g, alloc, 51, mode="coded-fast")
+    assert np.abs(res.state - res2.state).max() < 1e-6
+    assert res.state.sum() == pytest.approx(1.0, abs=1e-3)
+
+
+def test_sssp_matches_dijkstra():
+    n = divisible_n(40, 4, 2)
+    g = gm.erdos_renyi(n, 0.2, seed=4)
+    w = g.weights()
+    # Plain Dijkstra oracle.
+    import heapq
+    dist = np.full(g.n, np.inf)
+    dist[0] = 0.0
+    pq = [(0.0, 0)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        for v in np.flatnonzero(g.adj[u]):
+            nd = d + w[u, v]
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    alloc = er_allocation(n, 4, 2)
+    res = engine.run(algo.sssp(0), g, alloc, g.n, mode="coded-fast")
+    np.testing.assert_allclose(res.state, dist.astype(np.float32), rtol=1e-6)

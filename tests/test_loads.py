@@ -1,0 +1,125 @@
+"""Load accounting vs the paper's theory (Theorems 1-4, Lemma 3, Remark 10)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import graph_models as gm
+from repro.core import loads
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation)
+from repro.core.coded_shuffle import coded_load
+from repro.core.uncoded_shuffle import uncoded_load
+
+
+def _avg_loads(n, p, K, r, samples=4):
+    lu, lc = [], []
+    alloc = er_allocation(n, K, r)
+    for s in range(samples):
+        g = gm.erdos_renyi(n, p, seed=100 + s)
+        lu.append(uncoded_load(g.adj, alloc))
+        lc.append(coded_load(g.adj, alloc))
+    return float(np.mean(lu)), float(np.mean(lc))
+
+
+@pytest.mark.parametrize("r", [1, 2, 3, 4])
+def test_er_loads_match_theory(r):
+    K, p = 5, 0.1
+    n = divisible_n(300, K, r)
+    lu, lc = _avg_loads(n, p, K, r)
+    assert lu == pytest.approx(loads.uncoded_load_er(p, r, K), rel=0.05)
+    # Coded load sits between the converse and the finite-n achievable bound.
+    assert lc >= loads.lower_bound_er(p, r, K) * 0.97
+    assert lc <= loads.coded_load_er_finite(n, p, r, K) * 1.02
+
+
+def test_lemma3_lower_bound_is_below_measured():
+    K, r, p = 5, 2, 0.1
+    n = divisible_n(300, K, r)
+    alloc = er_allocation(n, K, r)
+    g = gm.erdos_renyi(n, p, seed=0)
+    # For the proposed allocation every vertex is Mapped at exactly r servers.
+    a_j = np.zeros(K)
+    a_j[r - 1] = n
+    lb = loads.lower_bound_lemma3(p, a_j, n, K)
+    assert lb == pytest.approx(loads.lower_bound_er(p, r, K))
+    assert coded_load(g.adj, alloc) >= lb * 0.97
+
+
+def test_converse_convexity_argument():
+    """Mixing multiplicities can't beat the uniform-r bound (eq. 65-67)."""
+    K, p, r = 6, 0.2, 3
+    uniform = loads.lower_bound_er(p, r, K)
+    for split in [(2, 4), (1, 5), (2, 5)]:
+        j1, j2 = split
+        w = (j2 - r) / (j2 - j1)          # fraction at j1 so the mean is r
+        a_j = np.zeros(K)
+        a_j[j1 - 1] = w * 100
+        a_j[j2 - 1] = (1 - w) * 100
+        mixed = loads.lower_bound_lemma3(p, a_j, 100, K)
+        assert mixed >= uniform - 1e-12
+
+
+def test_rb_load_within_theorem2_bounds():
+    n1 = n2 = 36
+    K, r, q = 6, 2, 0.3
+    alloc = bipartite_allocation(n1, n2, K, r)
+    lcs, lus = [], []
+    for s in range(4):
+        g = gm.random_bipartite(n1, n2, q, seed=s)
+        lcs.append(coded_load(g.adj, alloc))
+        lus.append(uncoded_load(g.adj, alloc))
+    lo, hi = loads.bounds_rb(q, r, K)
+    # Upper bound is asymptotic; allow finite-n slack. With the balanced
+    # clusters there is no phase-III spill, but phase-II coding still has to
+    # cover the leftovers uncoded when K2 < r+1.
+    assert np.mean(lcs) <= np.mean(lus)
+    assert np.mean(lcs) / q >= lo * 0.9
+
+
+def test_sbm_achievability_and_converse():
+    """Theorem 3: the plain ER allocation over the union of clusters attains
+    (1/r) p_eff (1 - r/K) - coding correctness never needed homogeneous edge
+    probabilities. (The two-cluster Appendix-A allocation is for RB graphs,
+    where it exploits the known absence of intra-cluster edges.)"""
+    n1 = n2 = 45
+    K, r, p, q = 6, 2, 0.3, 0.1
+    n = divisible_n(n1 + n2, K, r)
+    assert n == n1 + n2
+    alloc = er_allocation(n, K, r, interleave=True)
+    vals, uvals = [], []
+    for s in range(4):
+        g = gm.stochastic_block(n1, n2, p, q, seed=s)
+        vals.append(coded_load(g.adj, alloc))
+        uvals.append(uncoded_load(g.adj, alloc))
+    ach = loads.achievable_sbm(n1, n2, p, q, r, K)
+    assert loads.lower_bound_sbm(q, r, K) <= ach
+    # Finite-n: measured coded load near the Theorem-3 bound, gain near r.
+    assert np.mean(vals) == pytest.approx(ach, rel=0.25)
+    assert np.mean(uvals) / np.mean(vals) > 0.8 * r
+
+
+def test_remark10_time_model():
+    t_map, t_shuffle, t_reduce = 1.649, 43.78, 0.5
+    r_star = loads.optimal_r(t_map, t_shuffle)
+    assert r_star == pytest.approx(5.15, abs=0.02)   # paper's Scenario-2 number
+    ts = [loads.total_time_model(r, t_map, t_shuffle, t_reduce)
+          for r in range(1, 11)]
+    assert min(range(1, 11), key=lambda r: ts[r - 1]) == 5
+
+
+def test_power_law_theorem4_bound_monotone_in_r():
+    vals = [loads.achievable_pl(2.5, r, 10) for r in range(1, 10)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+
+
+def test_uncoded_load_decreases_linearly_in_r():
+    K, p = 5, 0.1
+    measured = []
+    for r in range(1, 5):
+        n = divisible_n(300, K, r)
+        lu, _ = _avg_loads(n, p, K, r, samples=2)
+        measured.append(lu)
+    # L^UC(r) = p(1 - r/K): successive differences constant ~ -p/K.
+    diffs = np.diff(measured)
+    assert np.allclose(diffs, -p / K, atol=0.004)

@@ -1,0 +1,96 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core import graph_models as gm
+from repro.core.allocation import divisible_n, er_allocation
+from repro.core.bitcodec import bits_to_floats, floats_to_bits, split_segments
+from repro.core.coded_shuffle import coded_load
+from repro.core.uncoded_shuffle import uncoded_load
+
+kr = st.tuples(st.integers(3, 6), st.integers(1, 4)).filter(lambda t: t[1] <= t[0])
+
+
+@given(kr, st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_allocation_invariants(kr_pair, seed):
+    K, r = kr_pair
+    n = divisible_n(30 + seed % 40, K, r)
+    alloc = er_allocation(n, K, r)
+    # Definition 1: computation load is exactly r.
+    assert alloc.computation_load() == r
+    # Every server Maps exactly r n/K vertices (Remark 1).
+    assert (alloc.map_sets.sum(axis=1) == r * n // K).all()
+    # Reduce partition: disjoint, complete, n/K each.
+    counts = np.bincount(alloc.reduce_owner, minlength=K)
+    assert (counts == n // K).all()
+    # Each vertex Mapped at exactly the r servers of its batch subset.
+    assert (alloc.map_sets.sum(axis=0) == r).all()
+
+
+@given(kr, st.floats(0.05, 0.6), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_coded_load_never_exceeds_uncoded(kr_pair, p, seed):
+    K, r = kr_pair
+    n = divisible_n(40, K, r)
+    g = gm.erdos_renyi(n, p, seed=seed)
+    alloc = er_allocation(n, K, r)
+    assert coded_load(g.adj, alloc) <= uncoded_load(g.adj, alloc) + 1e-12
+
+
+@given(st.lists(st.floats(allow_nan=False, width=32), min_size=1, max_size=64),
+       st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_bitcodec_split_reassemble(xs, r):
+    x = np.array(xs, dtype=np.float32)
+    bits = floats_to_bits(x)
+    segs = split_segments(bits, r)
+    reassembled = np.concatenate(segs, axis=1)
+    assert (bits_to_floats(reassembled).view(np.uint32)
+            == x.view(np.uint32)).all()
+
+
+@given(st.integers(0, 1000), st.floats(0.1, 0.5))
+@settings(max_examples=10, deadline=None)
+def test_distributed_pagerank_equals_oracle(seed, p):
+    K, r = 4, 2
+    n = divisible_n(36, K, r)
+    g = gm.erdos_renyi(n, p, seed=seed)
+    alloc = er_allocation(n, K, r)
+    prog = algo.pagerank()
+    ref = algo.reference_run(prog, g, 2)
+    res = engine.run(prog, g, alloc, 2, mode="coded")
+    np.testing.assert_array_equal(res.state, ref)
+
+
+@given(st.integers(2, 8), st.integers(2, 8), st.floats(0.01, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_time_model_optimum(tm_int, ts_int, scale):
+    """r* = sqrt(T_shuffle/T_map) minimizes the continuous Remark-10 model."""
+    from repro.core.loads import optimal_r, total_time_model
+    t_map, t_shuffle = tm_int * scale, ts_int * scale * 10
+    r_star = optimal_r(t_map, t_shuffle)
+    t_opt = total_time_model(r_star, t_map, t_shuffle, 0.0)
+    for r in np.linspace(max(0.2, r_star / 3), r_star * 3, 17):
+        assert total_time_model(float(r), t_map, t_shuffle, 0.0) >= t_opt - 1e-9
+
+
+@given(st.sampled_from(["er", "rb", "sbm", "pl"]), st.integers(0, 50))
+@settings(max_examples=16, deadline=None)
+def test_graph_models_are_simple_undirected(model, seed):
+    kw = {
+        "er": dict(n=40, p=0.3),
+        "rb": dict(n1=24, n2=16, q=0.3),
+        "sbm": dict(n1=24, n2=16, p=0.4, q=0.1),
+        "pl": dict(n=40, gamma=2.5),
+    }[model]
+    g = gm.sample(model, seed=seed, **kw)
+    assert (g.adj == g.adj.T).all()
+    assert not g.adj.diagonal().any()
+    if model == "rb":
+        assert not g.adj[:24, :24].any() and not g.adj[24:, 24:].any()
