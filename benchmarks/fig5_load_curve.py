@@ -10,24 +10,24 @@ import numpy as np
 from repro.core import graph_models as gm
 from repro.core import loads
 from repro.core.allocation import divisible_n, er_allocation
-from repro.core.coded_shuffle import coded_load
-from repro.core.uncoded_shuffle import uncoded_load
 
 K, P, SAMPLES = 5, 0.1, 5
 
 
-def run(report):
-    n = divisible_n(300, K, 2)
+def run(report, smoke=False):
+    n = divisible_n(60 if smoke else 300, K, 2)
+    samples = 2 if smoke else SAMPLES
     rows = []
     for r in range(1, K + 1):
         alloc = er_allocation(n, K, r)
         lu, lc = [], []
         t0 = time.perf_counter()
-        for s in range(SAMPLES):
+        for s in range(samples):
             g = gm.erdos_renyi(n, P, seed=1000 + s)
-            lu.append(uncoded_load(g.adj, alloc))
-            lc.append(coded_load(g.adj, alloc))
-        us = (time.perf_counter() - t0) / SAMPLES / (2 * K) * 1e6
+            measured = loads.empirical_loads(g.adj, alloc)
+            lu.append(measured["uncoded"])
+            lc.append(measured["coded"])
+        us = (time.perf_counter() - t0) / samples / (2 * K) * 1e6
         row = {
             "r": r,
             "uncoded": float(np.mean(lu)),

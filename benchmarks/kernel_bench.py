@@ -20,28 +20,37 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(report):
+def run(report, smoke=False):
     rng = np.random.default_rng(0)
-    adj = jnp.array((rng.random((512, 512)) < 0.1), jnp.float32)
-    x = jnp.array(rng.standard_normal(512), jnp.float32)
+    dim = 128 if smoke else 512
+    adj = jnp.array((rng.random((dim, dim)) < 0.1), jnp.float32)
+    x = jnp.array(rng.standard_normal(dim), jnp.float32)
     us_k = _time(lambda a, b: spmv_ops.spmv(a, b), adj, x)
     us_r = _time(lambda a, b: spmv_ops.spmv(a, b, use_kernel=False), adj, x)
-    report("spmv_pallas_512", us_k, f"ref_us={us_r:.0f}")
+    report(f"spmv_pallas_{dim}", us_k, f"ref_us={us_r:.0f}")
 
-    rows = jnp.array(rng.integers(0, 2**32, (3, 1024, 4), dtype=np.uint32))
-    valid = jnp.array(rng.random((3, 1024)) < 0.7)
+    cols = 256 if smoke else 1024
+    rows = jnp.array(rng.integers(0, 2**32, (3, cols, 4), dtype=np.uint32))
+    valid = jnp.array(rng.random((3, cols)) < 0.7)
     us_k = _time(lambda a, b: xor_ops.xor_encode(a, b), rows, valid)
     us_r = _time(lambda a, b: xor_ops.xor_encode(a, b, use_kernel=False),
                  rows, valid)
-    report("xor_encode_pallas_1024", us_k, f"ref_us={us_r:.0f}")
+    report(f"xor_encode_pallas_{cols}", us_k, f"ref_us={us_r:.0f}")
 
-    G, L, P, N = 4, 256, 32, 16
+    # The ShufflePlan batched route: [C, r] slot words through the kernel.
+    slotw = jnp.array(rng.integers(0, 2**32, (cols, 3), dtype=np.uint32))
+    us_k = _time(lambda a: xor_ops.xor_encode_columns(a), slotw)
+    us_r = _time(lambda a: xor_ops.xor_encode_columns(a, use_kernel=False),
+                 slotw)
+    report(f"xor_encode_columns_pallas_{cols}", us_k, f"ref_us={us_r:.0f}")
+
+    G, L, P, N = (2, 64, 8, 4) if smoke else (4, 256, 32, 16)
     args = (jnp.array(rng.standard_normal((G, L, P)), jnp.float32),
             jnp.array(rng.uniform(0.01, 0.2, (G, L)), jnp.float32),
             jnp.array(-rng.uniform(0.5, 2, G), jnp.float32),
             jnp.array(rng.standard_normal((G, L, N)), jnp.float32),
             jnp.array(rng.standard_normal((G, L, N)), jnp.float32),
             jnp.array(rng.standard_normal(G), jnp.float32))
-    us_k = _time(lambda *a: ssd_ops.ssd(*a, chunk=64)[0], *args)
+    us_k = _time(lambda *a: ssd_ops.ssd(*a, chunk=min(L, 64))[0], *args)
     us_r = _time(lambda *a: ssd_ops.ssd(*a, use_kernel=False)[0], *args)
-    report("ssd_chunk_pallas_256", us_k, f"seq_ref_us={us_r:.0f}")
+    report(f"ssd_chunk_pallas_{L}", us_k, f"seq_ref_us={us_r:.0f}")

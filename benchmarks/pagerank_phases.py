@@ -2,8 +2,12 @@
 
 Measures actual wall time of Map (kernelized SpMV) and Shuffle (bit volume /
 modeled link bandwidth) per r, fits T(r) = r T_map + T_shuffle / r + T_red,
-and reports the best r against the r* = sqrt(Ts/Tm) heuristic."""
-import math
+and reports the best r against the r* = sqrt(Ts/Tm) heuristic.
+
+Also measures the compile-once/execute-many ShufflePlan engine against the
+literal per-group reference on multi-iteration coded PageRank - the schedule
+is fixed by (graph, allocation), so compiling it once and replaying packed
+XOR arrays each iteration must beat re-deriving it every round."""
 import time
 
 import jax.numpy as jnp
@@ -13,7 +17,8 @@ from repro.core import algorithms as algo
 from repro.core import engine
 from repro.core import graph_models as gm
 from repro.core.allocation import divisible_n, er_allocation
-from repro.core.loads import optimal_r, total_time_model
+from repro.core.loads import optimal_r
+from repro.core.shuffle_plan import compile_plan
 from repro.kernels.spmv import ops as spmv_ops
 
 # Modeled phase costs (deterministic; wall-clock interpret-mode timings vary
@@ -24,9 +29,48 @@ LINK_BYTES_PER_SEC = 1.25e5
 PER_EDGE_MAP_S = 1e-5
 
 
-def run(report):
+def plan_vs_reference(report, smoke=False):
+    """Compile-once/execute-many speedup on multi-iteration coded PageRank.
+
+    Full size is the acceptance point (n=256 -> 360 after divisibility,
+    K=10, r=3, 10 iterations); smoke shrinks everything so CI stays fast.
+    Both paths are run end-to-end and must agree bit-for-bit on state and
+    on shuffle bits - the speedup is only reported if they do.
+    """
+    if smoke:
+        K, r, iters, n_req, p = 4, 2, 3, 40, 0.2
+    else:
+        K, r, iters, n_req, p = 10, 3, 10, 256, 0.05
+    n = divisible_n(n_req, K, r)
+    g = gm.erdos_renyi(n, p, seed=7)
+    alloc = er_allocation(n, K, r)
+    prog = algo.pagerank()
+
+    t0 = time.perf_counter()
+    ref = engine.run(prog, g, alloc, iters, mode="coded-ref")
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    plan = compile_plan(g.adj, alloc)
+    t_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fast = engine.run(prog, g, alloc, iters, mode="coded", plan=plan)
+    t_plan = time.perf_counter() - t0 + t_compile
+
+    assert np.array_equal(ref.state, fast.state), "plan diverged from reference"
+    assert ref.shuffle_bits == fast.shuffle_bits, "plan load accounting diverged"
+    speedup = t_ref / t_plan
+    report(f"plan_coded_pagerank_{iters}it_n{n}_K{K}_r{r}", t_plan * 1e6,
+           f"ref_s={t_ref:.3f} plan_s={t_plan:.3f} compile_s={t_compile:.3f} "
+           f"speedup={speedup:.1f}x")
+    return {"n": n, "K": K, "r": r, "iters": iters, "t_ref_s": t_ref,
+            "t_plan_s": t_plan, "t_compile_s": t_compile, "speedup": speedup}
+
+
+def run(report, smoke=False):
+    plan_stats = plan_vs_reference(report, smoke=smoke)
     K, p = 5, 0.12
-    n = divisible_n(300, K, 2)
+    n = divisible_n(60 if smoke else 300, K, 2)
     g = gm.erdos_renyi(n, p, seed=3)
     prog = algo.pagerank()
 
@@ -58,4 +102,4 @@ def run(report):
     r_star = optimal_r(t_map1, s1)
     report("remark10_r_star", 0.0,
            f"best_measured_r={best_r} r_star={r_star:.2f}")
-    return {"best_r": best_r, "r_star": r_star}
+    return {"best_r": best_r, "r_star": r_star, "plan": plan_stats}

@@ -1,5 +1,9 @@
 """Theorems 1-4: the inverse-linear computation<->communication trade-off on
-all four random graph models (measured coded gain vs r)."""
+all four random graph models (measured coded gain vs r).
+
+Loads are read off one compiled ShufflePlan per realization
+(`loads.empirical_loads`) instead of separate subset-enumeration and
+per-server scans."""
 import time
 
 import numpy as np
@@ -7,8 +11,7 @@ import numpy as np
 from repro.core import graph_models as gm
 from repro.core.allocation import (bipartite_allocation, divisible_n,
                                    er_allocation)
-from repro.core.coded_shuffle import coded_load
-from repro.core.uncoded_shuffle import uncoded_load
+from repro.core.loads import empirical_loads
 
 SAMPLES = 3
 
@@ -16,8 +19,9 @@ SAMPLES = 3
 def _measure(report, tag, graphs, alloc):
     lu, lc, t0 = [], [], time.perf_counter()
     for g in graphs:
-        lu.append(uncoded_load(g.adj, alloc))
-        lc.append(coded_load(g.adj, alloc))
+        measured = empirical_loads(g.adj, alloc)
+        lu.append(measured["uncoded"])
+        lc.append(measured["coded"])
     us = (time.perf_counter() - t0) / len(graphs) * 1e6
     gain = np.mean(lu) / np.mean(lc) if np.mean(lc) else float("nan")
     report(tag, us, f"uncoded={np.mean(lu):.4f} coded={np.mean(lc):.4f} "
@@ -25,28 +29,29 @@ def _measure(report, tag, graphs, alloc):
     return gain
 
 
-def run(report):
+def run(report, smoke=False):
     K = 6
+    base, samples = (60, 1) if smoke else (240, SAMPLES)
     out = {}
     for r in (2, 3):
         # ER (Theorem 1)
-        n = divisible_n(240, K, r)
+        n = divisible_n(base, K, r)
         alloc = er_allocation(n, K, r)
-        gs = [gm.erdos_renyi(n, 0.15, seed=s) for s in range(SAMPLES)]
+        gs = [gm.erdos_renyi(n, 0.15, seed=s) for s in range(samples)]
         out[f"er_r{r}"] = _measure(report, f"thm1_er_r{r}", gs, alloc)
         # RB (Theorem 2) - balanced clusters, Appendix-A allocation.
-        n1 = n2 = divisible_n(120, K // 2, min(r, K // 2))
+        n1 = n2 = divisible_n(base // 2, K // 2, min(r, K // 2))
         ab = bipartite_allocation(n1, n2, K, r)
-        gs = [gm.random_bipartite(n1, n2, 0.2, seed=s) for s in range(SAMPLES)]
+        gs = [gm.random_bipartite(n1, n2, 0.2, seed=s) for s in range(samples)]
         out[f"rb_r{r}"] = _measure(report, f"thm2_rb_r{r}", gs, ab)
         # SBM (Theorem 3) - union ER allocation (interleaved batches).
-        nn = divisible_n(240, K, r)
+        nn = divisible_n(base, K, r)
         sa = er_allocation(nn, K, r, interleave=True)
         gs = [gm.stochastic_block(nn // 2, nn // 2, 0.25, 0.08, seed=s)
-              for s in range(SAMPLES)]
+              for s in range(samples)]
         out[f"sbm_r{r}"] = _measure(report, f"thm3_sbm_r{r}", gs, sa)
         # PL (Theorem 4) - gamma > 2.
         ga = er_allocation(nn, K, r, interleave=True)
-        gs = [gm.power_law(nn, 2.5, seed=s) for s in range(SAMPLES)]
+        gs = [gm.power_law(nn, 2.5, seed=s) for s in range(samples)]
         out[f"pl_r{r}"] = _measure(report, f"thm4_pl_r{r}", gs, ga)
     return out

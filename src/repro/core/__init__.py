@@ -5,4 +5,4 @@ the distributed MapReduce-on-graph engine (§II-B), theory bounds (Thms 1-4),
 and r-redundancy fault tolerance.
 """
 from . import algorithms, allocation, bitcodec, coded_shuffle, engine  # noqa: F401
-from . import faults, graph_models, loads, uncoded_shuffle  # noqa: F401
+from . import faults, graph_models, loads, shuffle_plan, uncoded_shuffle  # noqa: F401

@@ -24,6 +24,38 @@ def bits_to_floats(bits: np.ndarray) -> np.ndarray:
     return packed.reshape(-1, 4).copy().view(np.float32).ravel()
 
 
+def floats_to_words(x: np.ndarray) -> np.ndarray:
+    """[m] float32 -> [m] uint32 in *codec bit order*.
+
+    Bit w of the codec bit-stream (floats_to_bits column w) is bit (31 - w) of
+    the word, so a segment [a, b) left-aligned into a column is just
+    ``(word << a) & top_mask(b - a)`` - the representation the ShufflePlan
+    executor and the xor_code kernels operate on.
+    """
+    return np.ascontiguousarray(x, dtype=np.float32).view(np.uint32).byteswap()
+
+
+def words_to_floats(w: np.ndarray) -> np.ndarray:
+    """[m] codec-order uint32 -> [m] float32 (inverse of floats_to_words)."""
+    return np.ascontiguousarray(w, dtype=np.uint32).byteswap().view(np.float32)
+
+
+def segment_words(r: int, t_bits: int = T_BITS) -> tuple[np.ndarray, np.ndarray]:
+    """Per-segment (left-shift, keep-mask) for codec-order uint32 words.
+
+    Segment s of a value word v travels left-aligned as
+    ``(v << shift[s]) & mask[s]``; ``>> shift[s]`` puts it back in place.
+    Shifts are clipped below t_bits so zero-width segments (r > t_bits) stay
+    defined; their mask is 0.
+    """
+    bounds = segment_bounds(r, t_bits)
+    lens = np.array([b - a for a, b in bounds], dtype=np.uint64)
+    shifts = np.minimum([a for a, _ in bounds], t_bits - 1).astype(np.uint32)
+    masks = (((np.uint64(1) << lens) - np.uint64(1))
+             << (np.uint64(t_bits) - lens)).astype(np.uint32)
+    return shifts, masks
+
+
 def segment_bounds(r: int, t_bits: int = T_BITS) -> list[tuple[int, int]]:
     """Split [0, t_bits) into r near-equal contiguous segments."""
     edges = np.linspace(0, t_bits, r + 1).round().astype(int)

@@ -150,6 +150,18 @@ def run_coded(adj: np.ndarray, values: np.ndarray,
 def coded_load(adj: np.ndarray, alloc: Allocation) -> float:
     """Exact normalized coded load of a realization (schedule only, no data).
 
+    Reads the size off the compiled ShufflePlan - bits-on-the-wire depend
+    only on the schedule, so this is a compile-time constant. Bit-identical
+    to the subset-enumeration accounting (`coded_load_reference`).
+    """
+    from .shuffle_plan import compile_plan
+
+    return compile_plan(adj, alloc, validate=False).coded_load()
+
+
+def coded_load_reference(adj: np.ndarray, alloc: Allocation) -> float:
+    """Legacy subset-enumeration load accounting (reference for the plan).
+
     Per group S and sender s, the number of coded columns is
     max_{k in S\\{s}} |Z^k|, each of ~T/r bits (exact per-segment widths).
     """

@@ -6,12 +6,19 @@ server Reduces R_k using *only* locally-Mapped plus delivered values. Any
 divergence from the single-machine oracle is therefore a real bug in the
 allocation or coding logic, not a modeling artifact.
 
+The multicast schedule depends only on (graph, allocation), so `run` compiles
+a `ShufflePlan` once and replays it every iteration (compile-once /
+execute-many); the schedule-completeness check that used to run per iteration
+now runs once at compile time inside `compile_plan`.
+
 Modes:
   single      - oracle, no distribution.
   uncoded     - baseline unicast shuffle   (load ~ p(1 - r/K)).
   coded       - paper's XOR multicast      (load ~ p(1 - r/K)/r), bit-exact.
-  coded-fast  - same schedule/loads via coded_load(), values moved directly
-                (skips the per-bit XOR simulation; used for large sweeps).
+  coded-fast  - same schedule/loads via the compiled plan, values moved
+                directly (skips the XOR simulation; used for large sweeps).
+  coded-ref   - the literal per-group reference (`coded_shuffle.run_coded`),
+                kept for A/B validation and benchmarking against the plan.
 """
 from __future__ import annotations
 
@@ -22,9 +29,12 @@ import numpy as np
 from .algorithms import VertexProgram
 from .allocation import Allocation
 from .bitcodec import T_BITS
-from .coded_shuffle import coded_load, run_coded
+from .coded_shuffle import run_coded
 from .graph_models import Graph
-from .uncoded_shuffle import missing_pairs, run_uncoded
+from .shuffle_plan import PlanShuffleResult, ShufflePlan, compile_plan
+from .uncoded_shuffle import missing_pairs
+
+PLAN_MODES = ("uncoded", "coded", "coded-fast")
 
 
 @dataclasses.dataclass
@@ -45,7 +55,7 @@ def _reduce_distributed(program: VertexProgram, g: Graph, alloc: Allocation,
                         values: np.ndarray,
                         delivered: dict[int, dict[tuple[int, int], float]],
                         state: np.ndarray) -> np.ndarray:
-    """Each server Reduces its rows from local columns + delivered values."""
+    """Dict-delivery Reduce (reference path; `faults.py` and coded-ref)."""
     new_state = np.empty_like(state)
     for k in range(alloc.K):
         vk = np.full((g.n, g.n), program.identity, dtype=np.float32)
@@ -67,32 +77,56 @@ def _reduce_distributed(program: VertexProgram, g: Graph, alloc: Allocation,
     return new_state
 
 
+def _reduce_plan(program: VertexProgram, g: Graph, alloc: Allocation,
+                 values: np.ndarray, res: PlanShuffleResult,
+                 state: np.ndarray) -> np.ndarray:
+    """Array-delivery Reduce: scatter each server's CSR slice, no dicts.
+
+    Schedule completeness was verified once at plan-compile time, so the
+    per-iteration missing-value scan of the dict path is not repeated here.
+    """
+    new_state = np.empty_like(state)
+    for k in range(alloc.K):
+        vk = np.full((g.n, g.n), program.identity, dtype=np.float32)
+        cols = alloc.map_sets[k]
+        vk[:, cols] = values[:, cols]                  # locally Mapped
+        a, b = int(res.ptr[k]), int(res.ptr[k + 1])
+        vk[res.i[a:b], res.j[a:b]] = res.values[a:b]   # delivered
+        rk = alloc.reduce_owner == k
+        reduced = program.reduce(vk, g.adj, state, g)
+        new_state[rk] = reduced[rk]
+    return new_state
+
+
 def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
-        iters: int, mode: str = "coded") -> EngineResult:
+        iters: int, mode: str = "coded",
+        plan: ShufflePlan | None = None) -> EngineResult:
+    """Execute `iters` rounds; plan modes compile the Shuffle schedule once
+    and replay it (pass a pre-compiled `plan` to amortize across runs)."""
     state = program.init(g)
     total_bits = 0
+    distributed = mode != "single" and alloc is not None
+    if distributed and mode in PLAN_MODES and plan is None:
+        # Uncoded only consumes the missing set; skip the column tables.
+        plan = compile_plan(g.adj, alloc, schedule=mode != "uncoded")
     for _ in range(iters):
         values = program.map_values(g, state).astype(np.float32)
-        if mode == "single" or alloc is None:
+        if not distributed:
             state = program.reduce(values, g.adj, state, g)
             continue
-        if mode == "uncoded":
-            res = run_uncoded(g.adj, values, alloc)
-            delivered, bits = res.delivered, res.bits_sent
-        elif mode == "coded":
-            res = run_coded(g.adj, values, alloc)
-            delivered, bits = res.delivered, res.bits_sent
+        if mode in PLAN_MODES:
+            res = plan.execute(values, mode)
+            total_bits += res.bits_sent
+            state = _reduce_plan(program, g, alloc, values, res, state)
+        elif mode == "coded-ref":
+            ref = run_coded(g.adj, values, alloc)
+            delivered, bits = ref.delivered, ref.bits_sent
             bits += _unicast_leftovers(g, alloc, values, delivered)
-        elif mode == "coded-fast":
-            delivered = {k: {} for k in range(alloc.K)}
-            for k in range(alloc.K):
-                for i, j in missing_pairs(g.adj, alloc, k):
-                    delivered[k][(int(i), int(j))] = float(values[i, j])
-            bits = int(round(coded_load(g.adj, alloc) * g.n * g.n * T_BITS))
+            total_bits += bits
+            state = _reduce_distributed(program, g, alloc, values, delivered,
+                                        state)
         else:
             raise ValueError(f"unknown mode {mode!r}")
-        total_bits += bits
-        state = _reduce_distributed(program, g, alloc, values, delivered, state)
     return EngineResult(state, iters, total_bits, mode)
 
 

@@ -10,58 +10,68 @@ aside); latency collapses from O(#groups * #columns) transmissions to one
 collective phase - this is the hardware adaptation of the paper's shared-bus
 assumption.
 
+The column/slot structure comes straight off the compiled `ShufflePlan`
+(compile-once), rather than re-enumerating (r+1)-subsets here; this file only
+lays the plan's columns out per sender for the dense all_gather.
+
 Runs under shard_map on a ('servers',) mesh; devices = servers.
 """
 from __future__ import annotations
-
-import functools
-import itertools
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..launch.mesh import shard_map_compat
 from .allocation import Allocation
-from .coded_shuffle import group_need
 from .graph_models import Graph
+from .shuffle_plan import compile_plan
 
 
 def build_schedule(adj: np.ndarray, alloc: Allocation):
     """Static (graph-dependent, data-independent) coded schedule.
 
-    For each server s: the list of (group, column, receiver->(i, j)) slots it
-    encodes, padded to a common buffer length so the all_gather is dense.
-    Returns numpy index tensors consumed by the jitted exchange.
+    Compiles the ShufflePlan once and lays its columns out per sender,
+    padded to a common buffer length so the all_gather is dense. Returns
+    numpy index tensors consumed by the jitted exchange.
     """
     K, r = alloc.K, alloc.r
-    plans = {s: [] for s in range(K)}
-    for S in itertools.combinations(range(K), r + 1):
-        Z = {k: group_need(adj, alloc, S, k) for k in S}
-        for s in S:
-            receivers = [k for k in S if k != s]
-            ncols = max((len(Z[k]) for k in receivers), default=0)
-            for c in range(ncols):
-                slot = {k: (int(Z[k][c][0]), int(Z[k][c][1]))
-                        for k in receivers if c < len(Z[k])}
-                plans[s].append((S, c, slot))
-    width = max((len(p) for p in plans.values()), default=0)
+    plan = compile_plan(adj, alloc, validate=False)
+    # Deterministic per-sender column order: (group, in-group column rank).
+    order = np.lexsort((plan.col_rank, plan.col_gm, plan.col_sender))
+    per_s: list[list[int]] = [[] for _ in range(K)]
+    for c in order:
+        per_s[int(plan.col_sender[c])].append(int(c))
+    width = max((len(p) for p in per_s), default=0)
+
+    P_pairs = plan.pair_k.size
     # Encode tensors: for slot t of server s, the XOR of values v[i,j] over
     # receivers. We express it as up-to-r (i, j) index pairs (-1 padded).
     enc_idx = np.full((K, width, r, 2), -1, dtype=np.int32)
-    for s, plan in plans.items():
-        for t, (S, c, slot) in enumerate(plan):
-            for ri, (k, (i, j)) in enumerate(sorted(slot.items())):
-                enc_idx[s, t, ri] = (i, j)
+    for s in range(K):
+        for t, c in enumerate(per_s[s]):
+            for sl in range(r):
+                p = int(plan.slot_pair[c, sl])
+                if p == P_pairs:          # sentinel: empty slot
+                    continue
+                enc_idx[s, t, sl] = (plan.pair_i[p], plan.pair_j[p])
     # Decode map: receiver k strips every other member's value from the slot.
     # For each (sender s, slot t) useful to k: target (i, j) plus the strip
     # list; represent as target idx and r-1 strip idx pairs.
-    dec = {k: [] for k in range(K)}
-    for s, plan in plans.items():
-        for t, (S, c, slot) in enumerate(plan):
-            for k, (i, j) in slot.items():
-                strips = [slot[k2] for k2 in slot if k2 != k]
-                dec[k].append((s, t, (i, j), strips))
+    dec: dict[int, list] = {k: [] for k in range(K)}
+    for s in range(K):
+        for t, c in enumerate(per_s[s]):
+            occupied = [sl for sl in range(r)
+                        if int(plan.slot_pair[c, sl]) != P_pairs]
+            for sl in occupied:
+                p = int(plan.slot_pair[c, sl])
+                k = int(plan.pair_k[p])
+                strips = [(int(plan.pair_i[int(plan.slot_pair[c, sl2])]),
+                           int(plan.pair_j[int(plan.slot_pair[c, sl2])]))
+                          for sl2 in occupied if sl2 != sl]
+                tgt = (int(plan.pair_i[p]), int(plan.pair_j[p]))
+                dec[k].append((s, t, tgt, strips))
     dwidth = max((len(d) for d in dec.values()), default=0)
     dec_src = np.zeros((K, dwidth, 2), dtype=np.int32)       # (sender, slot)
     dec_tgt = np.full((K, dwidth, 2), -1, dtype=np.int32)    # (i, j)
@@ -118,10 +128,10 @@ def fused_exchange(values: jnp.ndarray, enc_idx, dec_src, dec_tgt, dec_strip,
             jnp.where(tgt_ok, rec, jnp.uint32(0)))
         return jax.lax.psum(out, "servers")   # union of per-server recoveries
 
-    f = jax.shard_map(per_server, mesh=mesh,
-                      in_specs=(P("servers"), P("servers"), P("servers"),
-                                P("servers")),
-                      out_specs=P())
+    f = shard_map_compat(per_server, mesh=mesh,
+                         in_specs=(P("servers"), P("servers"), P("servers"),
+                                   P("servers")),
+                         out_specs=P())
     out_words = f(jnp.asarray(enc_idx), jnp.asarray(dec_src),
                   jnp.asarray(dec_tgt), jnp.asarray(dec_strip))
     return _as_floats(out_words)

@@ -1,13 +1,35 @@
 """Theory curves and bounds for the computation-communication trade-off.
 
-Everything here is closed-form from the paper; the benchmarks overlay these on
-empirical loads measured by the engine.
+Everything here is closed-form from the paper except `empirical_loads`,
+which reads the exact realized loads of a (graph, allocation) pair off one
+compiled ShufflePlan; the benchmarks overlay the closed forms on these.
 """
 from __future__ import annotations
 
 import math
 
 import numpy as np
+
+
+def empirical_loads(adj: np.ndarray, alloc) -> dict[str, float]:
+    """Exact uncoded/coded Definition-2 loads of one realization.
+
+    Both numbers come from a single plan compile (the schedule fixes the bit
+    volume; no data moves), replacing the separate subset-enumeration and
+    per-server scans the benchmarks used to run.
+    """
+    from .bitcodec import T_BITS
+    from .shuffle_plan import compile_plan
+
+    plan = compile_plan(adj, alloc, validate=False)
+    return {
+        "uncoded": plan.uncoded_load(),
+        "coded": plan.coded_load(),
+        "coded_leftover_unicast": plan.leftover_bits
+        / (alloc.n * alloc.n * T_BITS),
+        "gain": plan.uncoded_load() / plan.coded_load()
+        if plan.coded_bits else float("nan"),
+    }
 
 
 def uncoded_load_er(p: float, r: float, K: int) -> float:

@@ -1,0 +1,403 @@
+"""Compile-once / execute-many engine for the coded Shuffle (paper §IV-A).
+
+The multicast schedule of the coded scheme is fixed by the graph realization
+and the allocation alone - it never depends on the Map values. The legacy
+reference (`coded_shuffle.run_coded`) nevertheless re-derives the per-group
+need sets inside both encode and decode on *every* iteration, through
+per-value Python dict bookkeeping. This module factors that schedule out:
+
+  * `compile_plan(adj, alloc)` runs once and emits flat index arrays - the
+    needed-value (pair) table, per-column sender/slot tables with pre-computed
+    segment shifts and masks, per-receiver delivery segments, and the exact
+    bit accounting (which is schedule-only, hence a compile-time constant).
+  * `ShufflePlan.execute_*` replays the Shuffle for one iteration's values as
+    a handful of vectorized uint32 gathers and XORs (NumPy fast path), or
+    routes the column XOR-reduce through the `kernels/xor_code` Pallas kernel
+    (`backend="xor-kernel"`) so the TPU path sees realistic batched tiles.
+
+Everything is bit-exact against the literal reference; `tests/
+test_shuffle_plan.py` asserts equality of delivered values AND bits sent.
+
+Schedule derivation (why no subset enumeration is needed): a missing value
+(i, j) of Reducer k has batch T = subsets[batch_of[j]] with k not in T, and
+the unique (r+1)-group covering it is S = T u {k}. Enumerating the C(K, r+1)
+groups is therefore equivalent to a single vectorized pass over the edges.
+Batches whose subset size differs from r (the Appendix-A phase-III spill when
+r > K2) are exactly the pairs no group covers - they become the unicast
+leftovers, matching `engine._unicast_leftovers`.
+
+Column/segment layout: each value is a codec-order uint32 word (see
+`bitcodec.floats_to_words`); segment s travels left-aligned as
+``(word << shift_s) & mask_s``. A coded column is the XOR of its <= r slot
+words; a receiver strips the other slots (locally recomputable - it Mapped
+those batches) and shifts its own segment back into place. Widths, hence
+bits-on-the-wire, depend only on the schedule and are summed at compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .allocation import Allocation
+from .bitcodec import (T_BITS, floats_to_words, segment_bounds, segment_words,
+                       words_to_floats)
+
+
+@dataclasses.dataclass
+class PlanShuffleResult:
+    """One executed Shuffle: delivery arrays (sorted by receiver) + load.
+
+    Array-form counterpart of `uncoded_shuffle.ShuffleResult`; `delivered`
+    materializes the legacy dict layout lazily for compatibility/tests.
+    """
+
+    k: np.ndarray                # [M] int32 receiving server, ascending
+    i: np.ndarray                # [M] int32 row index of the value
+    j: np.ndarray                # [M] int32 column index of the value
+    values: np.ndarray           # [M] float32 recovered values
+    ptr: np.ndarray              # [K+1] CSR offsets into the arrays per server
+    bits_sent: int
+    n: int
+
+    @property
+    def normalized_load(self) -> float:
+        """Definition 2: total bits / (n^2 T)."""
+        return self.bits_sent / (self.n * self.n * T_BITS)
+
+    @property
+    def delivered(self) -> dict[int, dict[tuple[int, int], float]]:
+        out: dict[int, dict[tuple[int, int], float]] = {
+            k: {} for k in range(len(self.ptr) - 1)}
+        for k, i, j, v in zip(self.k, self.i, self.j, self.values):
+            out[int(k)][(int(i), int(j))] = float(v)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ShufflePlan:
+    """The compiled coded-Shuffle schedule of one (graph, allocation) pair."""
+
+    n: int
+    K: int
+    r: int
+    # Needed-value table: group-covered (receiver, i, j) triples, sorted by
+    # (group, receiver, i, j) - the legacy per-group argwhere order.
+    pair_k: np.ndarray           # [P] int32
+    pair_i: np.ndarray           # [P] int32
+    pair_j: np.ndarray           # [P] int32
+    # Column tables ([C] columns, <= r slots each). Slot entries are
+    # pre-masked: invalid slots point at the sentinel pair P (zero word)
+    # with mask 0, so encode is a plain gather-shift-mask-XOR.
+    # col_width is None iff the plan was compiled with schedule=False
+    # (missing set only); the coded executors then raise on use.
+    col_width: np.ndarray | None  # [C] int64 column width in bits
+    col_sender: np.ndarray       # [C] int32 multicasting server
+    col_gm: np.ndarray           # [C] uint64 group membership bitmask
+    col_rank: np.ndarray         # [C] int32 column index within (group, sender)
+    slot_pair: np.ndarray        # [C, r] int64 pair index (P = sentinel)
+    slot_shift: np.ndarray       # [C, r] uint32 segment left-shift
+    slot_mask: np.ndarray        # [C, r] uint32 segment keep-mask (0 = empty)
+    # Per-pair decode gather: segment t of pair p lives in column
+    # pair_col[p, t] at slot pair_slot[p, t]; shift back by seg_shift[t].
+    pair_col: np.ndarray         # [P, r] int64
+    pair_slot: np.ndarray        # [P, r] int64
+    seg_shift: np.ndarray        # [r] uint32
+    # Unicast leftovers: missing pairs no (r+1)-group covers (batch subset
+    # size != r, e.g. the Appendix-A phase-III spill).
+    left_k: np.ndarray           # [L] int32
+    left_i: np.ndarray           # [L] int32
+    left_j: np.ndarray           # [L] int32
+    # Full missing set (covered + leftovers) sorted by (k, i, j), plus the
+    # positions the covered/leftover entries occupy in it and per-server CSR.
+    all_k: np.ndarray            # [M] int32
+    all_i: np.ndarray            # [M] int32
+    all_j: np.ndarray            # [M] int32
+    pos_covered: np.ndarray      # [P] int64 position of pair p in all_*
+    pos_left: np.ndarray         # [L] int64
+    ptr: np.ndarray              # [K+1] int64 CSR offsets by server
+
+    # ---- compile-time load accounting (schedule-only, data-independent) ----
+
+    @property
+    def has_schedule(self) -> bool:
+        """False for missing-set-only plans (compile_plan(schedule=False))."""
+        return self.col_width is not None
+
+    def _require_schedule(self) -> None:
+        if not self.has_schedule:
+            raise ValueError(
+                "plan was compiled with schedule=False (uncoded missing set "
+                "only); recompile with schedule=True for the coded path")
+
+    @property
+    def coded_bits(self) -> int:
+        """Multicast bits of one Shuffle (excludes unicast leftovers)."""
+        self._require_schedule()
+        return int(self.col_width.sum())
+
+    @property
+    def leftover_bits(self) -> int:
+        return int(self.left_k.size) * T_BITS
+
+    @property
+    def uncoded_bits(self) -> int:
+        return int(self.all_k.size) * T_BITS
+
+    def coded_load(self) -> float:
+        """Exact normalized coded load (legacy `coded_load` semantics)."""
+        return self.coded_bits / (self.n * self.n * T_BITS)
+
+    def uncoded_load(self) -> float:
+        return self.uncoded_bits / (self.n * self.n * T_BITS)
+
+    # ---- per-iteration executors ----
+
+    def _slot_words(self, values: np.ndarray) -> np.ndarray:
+        """[C, r] pre-masked left-aligned segment words for this iteration."""
+        vals = values[self.pair_i, self.pair_j]
+        words = np.append(floats_to_words(vals), np.uint32(0))  # sentinel row
+        return (words[self.slot_pair] << self.slot_shift) & self.slot_mask
+
+    def execute_coded(self, values: np.ndarray, *, backend: str = "numpy",
+                      interpret: bool = True) -> PlanShuffleResult:
+        """One bit-exact coded Shuffle (multicast groups + unicast leftovers).
+
+        backend:
+          "numpy"      - vectorized uint32 XOR (fast path).
+          "xor-kernel" - column XOR-reduce through the Pallas xor_code kernel.
+          "xor-ref"    - same route through the jnp reference (kernel oracle).
+        """
+        self._require_schedule()
+        slotw = self._slot_words(values)
+        if backend == "numpy":
+            coded = np.bitwise_xor.reduce(slotw, axis=1)
+            # Receiver's strip = XOR of the other slots (locally
+            # recomputable: it Mapped those batches).
+            strip = coded[:, None] ^ slotw
+        elif backend in ("xor-kernel", "xor-ref"):
+            from ..kernels.xor_code import ops as xor_ops
+            use_kernel = backend == "xor-kernel"
+            coded = np.asarray(xor_ops.xor_encode_columns(
+                slotw, use_kernel=use_kernel, interpret=interpret))
+            strip = np.asarray(xor_ops.xor_strip_columns(
+                slotw, use_kernel=use_kernel, interpret=interpret))
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        rec = (coded[:, None] ^ strip) & self.slot_mask
+        # Gather each pair's r recovered segments and shift them into place.
+        segs = rec[self.pair_col, self.pair_slot] >> self.seg_shift[None, :]
+        pair_words = np.bitwise_or.reduce(segs, axis=1)
+        out = np.empty(self.all_k.size, dtype=np.float32)
+        out[self.pos_covered] = words_to_floats(pair_words)
+        out[self.pos_left] = values[self.left_i, self.left_j]
+        bits = self.coded_bits + self.leftover_bits
+        return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
+                                 self.ptr, bits, self.n)
+
+    def execute_fast(self, values: np.ndarray) -> PlanShuffleResult:
+        """Coded loads with direct value movement (legacy "coded-fast")."""
+        self._require_schedule()
+        out = np.ascontiguousarray(values[self.all_i, self.all_j], np.float32)
+        return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
+                                 self.ptr, self.coded_bits, self.n)
+
+    def execute_uncoded(self, values: np.ndarray) -> PlanShuffleResult:
+        """Baseline unicast Shuffle off the same compiled missing set."""
+        out = np.ascontiguousarray(values[self.all_i, self.all_j], np.float32)
+        return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
+                                 self.ptr, self.uncoded_bits, self.n)
+
+    def execute(self, values: np.ndarray, mode: str) -> PlanShuffleResult:
+        if mode == "coded":
+            return self.execute_coded(values)
+        if mode == "coded-fast":
+            return self.execute_fast(values)
+        if mode == "uncoded":
+            return self.execute_uncoded(values)
+        raise ValueError(f"unknown plan mode {mode!r}")
+
+
+def _run_ranks(*keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-element run id and rank-within-run of already-sorted key arrays."""
+    m = keys[0].size
+    if m == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    new = np.zeros(m, dtype=bool)
+    new[0] = True
+    for key in keys:
+        new[1:] |= key[1:] != key[:-1]
+    run = np.cumsum(new) - 1
+    starts = np.flatnonzero(new)
+    counts = np.diff(np.append(starts, m))
+    rank = np.arange(m) - np.repeat(starts, counts)
+    return run, rank
+
+
+def compile_plan(adj: np.ndarray, alloc: Allocation,
+                 validate: bool = True,
+                 schedule: bool = True) -> ShufflePlan:
+    """Compile the full coded-Shuffle schedule of (adj, alloc); see module doc.
+
+    One vectorized pass over the edges replaces the C(K, r+1) subset
+    enumeration of the legacy reference; the result is bit-exact equivalent.
+
+    `schedule=False` compiles only the missing set + per-server CSR (all the
+    uncoded executor needs), skipping the column/slot table construction;
+    the coded executors and load accounting then raise on use.
+    """
+    K, r, n = alloc.K, alloc.r, alloc.n
+    if K > 64:
+        raise NotImplementedError("group bitmasks require K <= 64")
+    seg_shift, seg_mask = segment_words(r)
+
+    # --- missing triples, edge-driven ---
+    ii, jj = np.nonzero(adj)
+    kk = alloc.reduce_owner[ii].astype(np.int32)
+    miss = ~alloc.map_sets[kk, jj]
+    ii = ii[miss].astype(np.int32)
+    jj = jj[miss].astype(np.int32)
+    kk = kk[miss]
+    bb = alloc.batch_of[jj]
+
+    if not schedule:                # missing-set-only plan (uncoded shuffle)
+        order = np.lexsort((jj, ii, kk))
+        all_k, all_i, all_j = kk[order], ii[order], jj[order]
+        M = all_k.size
+        empty = np.zeros(0, np.int32)
+        plan = ShufflePlan(
+            n=n, K=K, r=r,
+            pair_k=empty, pair_i=empty, pair_j=empty,
+            col_width=None, col_sender=empty,
+            col_gm=np.zeros(0, np.uint64), col_rank=empty,
+            slot_pair=np.zeros((0, r), np.int64),
+            slot_shift=np.zeros((0, r), np.uint32),
+            slot_mask=np.zeros((0, r), np.uint32),
+            pair_col=np.zeros((0, r), np.int64),
+            pair_slot=np.zeros((0, r), np.int64), seg_shift=seg_shift,
+            left_k=empty, left_i=empty, left_j=empty,
+            all_k=all_k, all_i=all_i, all_j=all_j,
+            pos_covered=np.zeros(0, np.int64),
+            pos_left=np.arange(M, dtype=np.int64),
+            ptr=np.searchsorted(all_k, np.arange(K + 1)).astype(np.int64))
+        if validate:
+            _validate(plan, adj, alloc)
+        return plan
+
+    subset_size = np.array([len(s) for s in alloc.subsets], dtype=np.int64)
+    subset_mask = np.array([sum(1 << s for s in S) for S in alloc.subsets],
+                           dtype=np.uint64)
+    covered = subset_size[bb] == r
+
+    # Leftovers: no (r+1)-group exists for these; unicast (phase-III spill).
+    lsel = ~covered
+    lorder = np.lexsort((jj[lsel], ii[lsel], kk[lsel]))
+    left_k, left_i, left_j = (kk[lsel][lorder], ii[lsel][lorder],
+                              jj[lsel][lorder])
+
+    # Covered pairs, sorted by (group, receiver, i, j) = legacy Z^k order.
+    gm = subset_mask[bb] | (np.uint64(1) << kk.astype(np.uint64))
+    corder = np.lexsort((jj[covered], ii[covered], kk[covered], gm[covered]))
+    pair_k = kk[covered][corder]
+    pair_i = ii[covered][corder]
+    pair_j = jj[covered][corder]
+    pair_b = bb[covered][corder]
+    pair_gm = gm[covered][corder]
+    P = pair_k.size
+    _, rank = _run_ranks(pair_gm, pair_k)   # column index within (S, k)
+
+    # --- entries: one per (pair, segment); sender t = t-th batch member ---
+    members = np.zeros((len(alloc.subsets), r), dtype=np.int32)
+    for b, S in enumerate(alloc.subsets):
+        if len(S) == r:
+            members[b] = S                   # ascending == others order
+    e_sender = members[pair_b]               # [P, r]
+    e_gm = np.repeat(pair_gm, r)
+    e_c = np.repeat(rank, r)
+    e_s = e_sender.ravel()
+    e_t = np.tile(np.arange(r), P)
+    seg_len = np.array([b - a for a, b in segment_bounds(r)], dtype=np.int64)
+    e_len = seg_len[e_t]
+
+    # --- columns: unique (group, sender, rank) ---
+    eorder = np.lexsort((e_c, e_s, e_gm))
+    col_sorted, slot_sorted = _run_ranks(e_gm[eorder], e_s[eorder],
+                                         e_c[eorder])
+    C = int(col_sorted[-1]) + 1 if col_sorted.size else 0
+    if slot_sorted.size:
+        assert int(slot_sorted.max()) < r, "column overfull: schedule bug"
+    col_of_e = np.empty(P * r, dtype=np.int64)
+    slot_of_e = np.empty(P * r, dtype=np.int64)
+    col_of_e[eorder] = col_sorted
+    slot_of_e[eorder] = slot_sorted
+
+    col_width = np.zeros(C, dtype=np.int64)
+    np.maximum.at(col_width, col_of_e, e_len)
+    firsts = np.zeros(C, dtype=np.int64)
+    firsts[col_sorted[::-1]] = eorder[::-1]  # first entry of each column
+    col_sender = e_s[firsts].astype(np.int32)
+    col_gm = e_gm[firsts]
+    col_rank = e_c[firsts].astype(np.int32)
+
+    slot_pair = np.full((C, r), P, dtype=np.int64)      # sentinel zero word
+    slot_shift = np.zeros((C, r), dtype=np.uint32)
+    slot_mask = np.zeros((C, r), dtype=np.uint32)
+    e_p = np.repeat(np.arange(P, dtype=np.int64), r)
+    slot_pair[col_of_e, slot_of_e] = e_p
+    slot_shift[col_of_e, slot_of_e] = seg_shift[e_t]
+    slot_mask[col_of_e, slot_of_e] = seg_mask[e_t]
+
+    pair_col = col_of_e.reshape(P, r)        # entries are (pair, t)-major
+    pair_slot = slot_of_e.reshape(P, r)
+
+    # --- full missing set sorted by (k, i, j) + per-server CSR ---
+    all_k = np.concatenate([pair_k, left_k])
+    all_i = np.concatenate([pair_i, left_i])
+    all_j = np.concatenate([pair_j, left_j])
+    aorder = np.lexsort((all_j, all_i, all_k))
+    inv = np.empty(all_k.size, dtype=np.int64)
+    inv[aorder] = np.arange(all_k.size)
+    all_k, all_i, all_j = all_k[aorder], all_i[aorder], all_j[aorder]
+    ptr = np.searchsorted(all_k, np.arange(K + 1)).astype(np.int64)
+
+    plan = ShufflePlan(
+        n=n, K=K, r=r,
+        pair_k=pair_k, pair_i=pair_i, pair_j=pair_j,
+        col_width=col_width, col_sender=col_sender, col_gm=col_gm,
+        col_rank=col_rank,
+        slot_pair=slot_pair, slot_shift=slot_shift, slot_mask=slot_mask,
+        pair_col=pair_col, pair_slot=pair_slot, seg_shift=seg_shift,
+        left_k=left_k, left_i=left_i, left_j=left_j,
+        all_k=all_k, all_i=all_i, all_j=all_j,
+        pos_covered=inv[:P], pos_left=inv[P:], ptr=ptr)
+    if validate:
+        _validate(plan, adj, alloc)
+    return plan
+
+
+def _validate(plan: ShufflePlan, adj: np.ndarray, alloc: Allocation) -> None:
+    """Compile-time schedule check (replaces the per-iteration engine scan):
+    the plan's delivery set must be exactly what each Reducer is missing."""
+    from .uncoded_shuffle import missing_pairs
+
+    for k in range(alloc.K):
+        need = missing_pairs(adj, alloc, k)          # (i, j)-sorted
+        a, b = int(plan.ptr[k]), int(plan.ptr[k + 1])
+        got = np.column_stack([plan.all_i[a:b], plan.all_j[a:b]])
+        if got.shape != need.shape or not (got == need).all():
+            raise AssertionError(
+                f"server {k}: plan delivers {b - a} values, "
+                f"Reducer misses {len(need)} (or sets differ)")
+    if plan.pair_col.size == 0:
+        return
+    # Each covered pair owns exactly its r slots, and the recovered segments
+    # must tile the full 32-bit value.
+    P = plan.pair_k.size
+    owner = plan.slot_pair[plan.pair_col, plan.pair_slot]
+    assert (owner == np.arange(P, dtype=np.int64)[:, None]).all(), \
+        "pair/slot cross-links are inconsistent"
+    own = plan.slot_mask[plan.pair_col, plan.pair_slot] \
+        >> plan.seg_shift[None, :]
+    cover = np.bitwise_or.reduce(own, axis=1)
+    assert (cover == np.uint32(0xFFFFFFFF)).all(), \
+        "segments do not tile the 32-bit value"

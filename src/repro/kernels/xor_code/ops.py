@@ -24,6 +24,51 @@ def xor_decode(coded: jnp.ndarray, known_rows: jnp.ndarray,
     return jnp.bitwise_xor(coded, strip)
 
 
+def xor_encode_columns(slot_words, *, lanes: int = 128,
+                       use_kernel: bool = True,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Batched ShufflePlan route: [C, r] uint32 slot words -> [C] coded columns.
+
+    The plan executor hands over one pre-masked segment word per (column,
+    slot); invalid slots are zero, so no validity mask is needed and the
+    column axis can be reshaped freely. We fold it into [r, C/lanes, lanes]
+    so the Pallas kernel sees VPU-shaped uint32 tiles (lane dim 128) instead
+    of W=1 slivers - this is the path that feeds the kernel realistic
+    workloads (C ~ thousands of coded columns per Shuffle).
+    """
+    slot_words = jnp.asarray(slot_words, jnp.uint32)
+    c, r = slot_words.shape
+    if c == 0:                     # empty schedule: nothing to multicast
+        return jnp.zeros(0, jnp.uint32)
+    pad = (-c) % lanes
+    rows = jnp.pad(slot_words, ((0, pad), (0, 0))).T    # [r, C+pad]
+    rows = rows.reshape(r, (c + pad) // lanes, lanes)
+    valid = jnp.ones(rows.shape[:2], dtype=jnp.bool_)
+    out = xor_encode(rows, valid, use_kernel=use_kernel, interpret=interpret)
+    return out.reshape(-1)[:c]
+
+
+def xor_strip_columns(slot_words, *, lanes: int = 128,
+                      use_kernel: bool = True,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Per-slot strip words: [C, r] with strip[:, t] = XOR of the OTHER slots.
+
+    This is the receiver side of the coded Shuffle: the receiver at slot t
+    XORs the locally-recomputable slots out of the coded column, leaving its
+    own segment (`coded ^ strip[:, t]`). r is small and static, so the
+    per-slot loop unrolls into r batched kernel calls.
+    """
+    slot_words = jnp.asarray(slot_words, jnp.uint32)
+    _, r = slot_words.shape
+    cols = []
+    for t in range(r):
+        others = slot_words.at[:, t].set(jnp.uint32(0))
+        cols.append(xor_encode_columns(others, lanes=lanes,
+                                       use_kernel=use_kernel,
+                                       interpret=interpret))
+    return jnp.stack(cols, axis=1)
+
+
 def floats_as_words(x: jnp.ndarray) -> jnp.ndarray:
     """Bit-preserving float32 -> uint32 view (lane codec for the fused path)."""
     return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)

@@ -9,18 +9,45 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_auto(shape, axes):
+    """jax.make_mesh with Auto axis types on every jax we support.
+
+    jax >= 0.5 takes `axis_types`; on 0.4.x the argument does not exist and
+    Auto is the only (default) behavior, so omitting it is equivalent.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """shard_map across the jax versions we support.
+
+    jax >= 0.6 exposes jax.shard_map with `check_vma`; 0.4.x has the
+    experimental shard_map with the equivalent `check_rep`. `check=False`
+    disables the output-replication check (needed when out_specs promise
+    more replication than the checker can prove, e.g. psum-ed outputs).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline (per chip).

@@ -129,6 +129,8 @@ def from_compiled(compiled, chips: int) -> Roofline:
 def from_compiled_xla(compiled, chips: int) -> Roofline:
     """The raw (trip-blind) XLA numbers - kept for comparison/debugging."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):              # jax 0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     breakdown = collective_bytes(compiled.as_text())

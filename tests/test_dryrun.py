@@ -6,6 +6,7 @@ exercised by `launch/dryrun.py --all` (see dryrun_results_*.json); here we
 pin one representative cell per step-kind.
 """
 import json
+import os
 import subprocess
 import sys
 
@@ -16,7 +17,9 @@ def _run_cell(arch, shape, extra=()):
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
            "--shape", shape, *extra]
     proc = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
-                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": os.environ.get("HOME", "/tmp"),
+                               "JAX_PLATFORMS": "cpu"})
     line = proc.stdout.strip().splitlines()[-1]
     return json.loads(line), proc
 

@@ -2,6 +2,7 @@
 multi-device mesh. Runs in a subprocess so the 6-device host-platform flag
 never leaks into other tests."""
 import json
+import os
 import subprocess
 import sys
 
@@ -27,8 +28,7 @@ prog = algo.pagerank()
 values = np.asarray(prog.map_values(g, prog.init(g)), np.float32)
 values = np.where(g.adj, values, 0.0).astype(np.float32)
 
-mesh = jax.make_mesh((K,), ("servers",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((K,), ("servers",))
 rec = np.asarray(run_fused(g, values, alloc, mesh))
 
 ok, total = 0, 0
@@ -41,9 +41,14 @@ print(json.dumps({"ok": int(ok), "total": int(total)}))
 
 
 def test_fused_shuffle_bit_exact_on_6_devices():
+    # HOME must survive (jax device init blocks without a resolvable home
+    # dir), and the CPU platform must be pinned so jax does not probe for an
+    # accelerator the sandbox cannot initialize.
     proc = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                           text=True, timeout=300,
-                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": os.environ.get("HOME", "/tmp"),
+                               "JAX_PLATFORMS": "cpu"})
     assert proc.returncode == 0, proc.stderr[-2000:]
     res = json.loads(proc.stdout.strip().splitlines()[-1])
     assert res["total"] > 100          # non-trivial demand

@@ -1,6 +1,7 @@
 """shard_map expert parallelism == dense einsum dispatch, on a real
 (data=2, model=2) mesh (subprocess keeps the device flag contained)."""
 import json
+import os
 import subprocess
 import sys
 
@@ -44,7 +45,9 @@ print(json.dumps({"err": err, "scale": float(jnp.abs(dense).max()),
 def test_moe_ep_matches_dense_dispatch():
     proc = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                           text=True, timeout=420,
-                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": os.environ.get("HOME", "/tmp"),
+                               "JAX_PLATFORMS": "cpu"})
     assert proc.returncode == 0, proc.stderr[-3000:]
     res = json.loads(proc.stdout.strip().splitlines()[-1])
     assert res["err"] < 1e-4 * max(res["scale"], 1.0), res

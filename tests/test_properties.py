@@ -1,9 +1,12 @@
 """Hypothesis property tests on the system's invariants."""
-import math
-
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests are skipped, not ERRORs")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import algorithms as algo
 from repro.core import engine

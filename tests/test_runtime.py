@@ -120,19 +120,18 @@ def test_training_reduces_loss():
 # ---- sharding rules ----
 
 def test_rules_divisibility_fallback():
-    import os
+    from repro.launch.mesh import make_mesh_auto
     from repro.sharding.rules import spec_for
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     # All dims divisible by 1: everything resolves to the first candidate.
     spec = spec_for(mesh, ("embed", "heads"), (64, 14))
     assert spec == jax.sharding.PartitionSpec("data", "model")
 
 
 def test_rules_no_axis_used_twice():
+    from repro.launch.mesh import make_mesh_auto
     from repro.sharding.rules import spec_for
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     spec = spec_for(mesh, ("heads", "mlp"), (16, 64))   # both want 'model'
     got = [s for s in spec if s is not None]
     assert got.count("model") <= 1

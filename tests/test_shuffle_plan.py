@@ -1,0 +1,214 @@
+"""ShufflePlan compile-once/execute-many vs the literal references.
+
+The compiled plan must be *bit-exact* against `run_coded` / `run_uncoded`
+(delivered values AND bits on the wire), and its compile-time load accounting
+must equal the legacy subset-enumeration value.
+"""
+import numpy as np
+import pytest
+
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core import graph_models as gm
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation, random_allocation)
+from repro.core.bitcodec import (floats_to_bits, floats_to_words,
+                                 words_to_floats)
+from repro.core.coded_shuffle import (coded_load, coded_load_reference,
+                                      run_coded)
+from repro.core.loads import empirical_loads
+from repro.core.shuffle_plan import compile_plan
+from repro.core.uncoded_shuffle import run_uncoded, uncoded_load
+
+
+def _values(g, seed=7):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((g.n, g.n)).astype(np.float32)
+    return np.where(g.adj, v, 0.0).astype(np.float32)
+
+
+def _er_case(K, r, n0=50, p=0.25):
+    n = divisible_n(n0, K, r)
+    g = gm.erdos_renyi(n, p, seed=K * 10 + r)
+    return g, er_allocation(n, K, r)
+
+
+def _sbm_case(K, r):
+    g = gm.stochastic_block(48, 24, 0.25, 0.1, seed=K + r)
+    return g, bipartite_allocation(48, 24, K, r)
+
+
+def _assert_same_delivery(res, ref):
+    """Delivered sets identical and every value equal at the bit level."""
+    got, want = res.delivered, ref.delivered
+    assert got.keys() == want.keys()
+    for k in want:
+        assert got[k].keys() == want[k].keys()
+        for key in want[k]:
+            assert (np.float32(got[k][key]).view(np.uint32)
+                    == np.float32(want[k][key]).view(np.uint32)), (k, key)
+
+
+@pytest.mark.parametrize("K,r", [(4, 1), (4, 2), (4, 3), (5, 2), (5, 3),
+                                 (5, 4), (6, 2)])
+def test_plan_coded_bit_exact_vs_reference_er(K, r):
+    g, alloc = _er_case(K, r)
+    vals = _values(g)
+    ref = run_coded(g.adj, vals, alloc)
+    plan = compile_plan(g.adj, alloc)
+    res = plan.execute_coded(vals)
+    assert plan.left_k.size == 0          # ER allocation: full group coverage
+    assert res.bits_sent == ref.bits_sent
+    _assert_same_delivery(res, ref)
+
+
+@pytest.mark.parametrize("K,r", [(6, 2), (6, 3)])
+def test_plan_coded_bit_exact_vs_reference_sbm(K, r):
+    g, alloc = _sbm_case(K, r)
+    vals = _values(g)
+    ref = run_coded(g.adj, vals, alloc)
+    plan = compile_plan(g.adj, alloc)
+    res = plan.execute_coded(vals)
+    # The reference covers only the multicast groups; the plan also carries
+    # the unicast leftovers (Appendix-A spill), exactly T bits each.
+    assert res.bits_sent == ref.bits_sent + plan.leftover_bits
+    got = res.delivered
+    for k in ref.delivered:
+        for key, v in ref.delivered[k].items():
+            assert (np.float32(got[k][key]).view(np.uint32)
+                    == np.float32(v).view(np.uint32))
+
+
+@pytest.mark.parametrize("K,r", [(4, 2), (5, 3), (6, 2)])
+def test_plan_uncoded_matches_reference(K, r):
+    g, alloc = _er_case(K, r, p=0.3)
+    vals = _values(g)
+    ref = run_uncoded(g.adj, vals, alloc)
+    res = compile_plan(g.adj, alloc).execute_uncoded(vals)
+    assert res.bits_sent == ref.bits_sent
+    _assert_same_delivery(res, ref)
+
+
+@pytest.mark.parametrize("K,r", [(4, 1), (4, 2), (5, 2), (5, 3), (5, 4),
+                                 (6, 3)])
+def test_plan_coded_load_matches_legacy_enumeration_er(K, r):
+    g, alloc = _er_case(K, r, n0=40, p=0.3)
+    assert coded_load(g.adj, alloc) == coded_load_reference(g.adj, alloc)
+    measured = empirical_loads(g.adj, alloc)
+    assert measured["coded"] == coded_load_reference(g.adj, alloc)
+    assert measured["uncoded"] == uncoded_load(g.adj, alloc)
+
+
+@pytest.mark.parametrize("K,r", [(6, 2), (6, 3)])
+def test_plan_coded_load_matches_legacy_enumeration_sbm(K, r):
+    g, alloc = _sbm_case(K, r)
+    assert coded_load(g.adj, alloc) == coded_load_reference(g.adj, alloc)
+
+
+def test_plan_covers_random_allocation():
+    """The edge-driven compiler must reproduce the subset-enumeration
+    schedule on an unstructured (random) allocation too."""
+    n, K, r = 60, 5, 2
+    alloc = random_allocation(n, K, r, seed=3)
+    g = gm.erdos_renyi(n, 0.25, seed=9)
+    vals = _values(g)
+    ref = run_coded(g.adj, vals, alloc)
+    plan = compile_plan(g.adj, alloc)
+    res = plan.execute_coded(vals)
+    assert res.bits_sent == ref.bits_sent + plan.leftover_bits
+    got = res.delivered
+    for k in ref.delivered:
+        for key, v in ref.delivered[k].items():
+            assert (np.float32(got[k][key]).view(np.uint32)
+                    == np.float32(v).view(np.uint32))
+
+
+def test_plan_engine_modes_match_oracle_with_spill():
+    """bipartite r > K2 forces unicast leftovers (phase-III spill); the plan
+    engine must still match the oracle and the legacy reference bits."""
+    g = gm.stochastic_block(48, 24, 0.25, 0.1, seed=5)
+    alloc = bipartite_allocation(48, 24, 6, 3)
+    plan = compile_plan(g.adj, alloc)
+    assert plan.left_k.size > 0
+    prog = algo.pagerank()
+    ref = algo.reference_run(prog, g, 3)
+    res = engine.run(prog, g, alloc, 3, mode="coded")
+    legacy = engine.run(prog, g, alloc, 3, mode="coded-ref")
+    np.testing.assert_array_equal(res.state, ref)
+    np.testing.assert_array_equal(legacy.state, ref)
+    assert res.shuffle_bits == legacy.shuffle_bits
+
+
+def test_plan_engine_bits_match_legacy_reference():
+    g, alloc = _er_case(5, 3, n0=40, p=0.2)
+    prog = algo.pagerank()
+    res = engine.run(prog, g, alloc, 2, mode="coded")
+    legacy = engine.run(prog, g, alloc, 2, mode="coded-ref")
+    np.testing.assert_array_equal(res.state, legacy.state)
+    assert res.shuffle_bits == legacy.shuffle_bits
+
+
+@pytest.mark.parametrize("backend", ["xor-ref", "xor-kernel"])
+def test_plan_xor_code_backends_bit_exact(backend):
+    """The batched route through kernels/xor_code (Pallas + jnp oracle)."""
+    g, alloc = _er_case(4, 2, n0=24, p=0.3)
+    vals = _values(g)
+    plan = compile_plan(g.adj, alloc)
+    a = plan.execute_coded(vals)
+    b = plan.execute_coded(vals, backend=backend)
+    assert a.bits_sent == b.bits_sent
+    np.testing.assert_array_equal(a.values.view(np.uint32),
+                                  b.values.view(np.uint32))
+
+
+def test_plan_schedule_is_data_independent():
+    """Same plan replayed over different value matrices stays bit-exact."""
+    g, alloc = _er_case(5, 2)
+    plan = compile_plan(g.adj, alloc)
+    for seed in (1, 2, 3):
+        vals = _values(g, seed=seed)
+        ref = run_coded(g.adj, vals, alloc)
+        res = plan.execute_coded(vals)
+        assert res.bits_sent == ref.bits_sent
+        _assert_same_delivery(res, ref)
+
+
+def test_words_codec_consistent_with_bit_codec():
+    """codec-order words: bit w of the bit-stream == bit (31-w) of the word."""
+    x = np.array([0.0, -0.0, 1.5, -3.25e-12, np.inf, 7e37], dtype=np.float32)
+    bits = floats_to_bits(x)
+    words = floats_to_words(x)
+    w = np.arange(32)
+    expanded = (words[:, None] >> np.uint32(31 - w)[None, :]) & np.uint32(1)
+    np.testing.assert_array_equal(expanded.astype(np.uint8), bits)
+    np.testing.assert_array_equal(words_to_floats(words).view(np.uint32),
+                                  x.view(np.uint32))
+
+
+def test_r_equals_K_compiles_to_empty_plan():
+    K = 4
+    n = divisible_n(24, K, K)
+    g = gm.erdos_renyi(n, 0.5, seed=0)
+    plan = compile_plan(g.adj, er_allocation(n, K, K))
+    assert plan.coded_bits == 0 and plan.uncoded_bits == 0
+    for backend in ("numpy", "xor-ref", "xor-kernel"):
+        res = plan.execute_coded(_values(g), backend=backend)
+        assert res.bits_sent == 0 and res.values.size == 0
+
+
+def test_missing_set_only_plan_serves_uncoded_and_guards_coded():
+    g, alloc = _er_case(5, 2)
+    vals = _values(g)
+    lean = compile_plan(g.adj, alloc, schedule=False)
+    full = compile_plan(g.adj, alloc)
+    assert not lean.has_schedule and full.has_schedule
+    a, b = lean.execute_uncoded(vals), full.execute_uncoded(vals)
+    assert a.bits_sent == b.bits_sent
+    np.testing.assert_array_equal(a.values.view(np.uint32),
+                                  b.values.view(np.uint32))
+    with pytest.raises(ValueError, match="schedule=False"):
+        lean.execute_coded(vals)
+    with pytest.raises(ValueError, match="schedule=False"):
+        lean.execute_fast(vals)
+    with pytest.raises(ValueError, match="schedule=False"):
+        _ = lean.coded_bits
