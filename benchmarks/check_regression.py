@@ -1,0 +1,64 @@
+"""CI gate: fail if smoke benchmark wall-clock regresses vs the committed
+baseline.
+
+    python benchmarks/check_regression.py bench-smoke.json BENCH_scale.json
+
+Compares every baseline record whose name starts with --prefix (default
+``scale_``) against the fresh smoke run; a per-record wall-clock ratio above
+--tol (default 2.0, override with $BENCH_TOL for noisy runners) or a missing
+record fails the job. Derived metrics (loads, speedups) are informational.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _records(path: str, prefix: str) -> dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    return {rec["name"]: float(rec["us_per_call"])
+            for rec in data["records"]
+            if rec["name"].startswith(prefix) and rec["us_per_call"] > 0}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh run.py --smoke --json output")
+    ap.add_argument("baseline", help="committed baseline (BENCH_scale.json)")
+    ap.add_argument("--prefix", default="scale_")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_TOL", "2.0")))
+    args = ap.parse_args(argv)
+
+    cur = _records(args.current, args.prefix)
+    base = _records(args.baseline, args.prefix)
+    if not base:
+        print(f"no baseline records with prefix {args.prefix!r} in "
+              f"{args.baseline}", file=sys.stderr)
+        return 1
+    failed = []
+    print(f"{'name':<40} {'base_us':>12} {'now_us':>12} {'ratio':>7}")
+    for name, want in sorted(base.items()):
+        got = cur.get(name)
+        if got is None:
+            print(f"{name:<40} {want:>12.1f} {'MISSING':>12} {'-':>7}")
+            failed.append(name)
+            continue
+        ratio = got / want
+        flag = " FAIL" if ratio > args.tol else ""
+        print(f"{name:<40} {want:>12.1f} {got:>12.1f} {ratio:>6.2f}x{flag}")
+        if ratio > args.tol:
+            failed.append(name)
+    if failed:
+        print(f"\nwall-clock regression >{args.tol:.1f}x (or missing record) "
+              f"in: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(base)} records within {args.tol:.1f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

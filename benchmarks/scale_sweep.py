@@ -1,0 +1,82 @@
+"""Sparse-path scale sweep: coded vs uncoded PageRank across n.
+
+For each n the sweep reports per-iteration wall-clock and tracemalloc peak
+memory of the sparse O(edges) engine (`path="sparse"`), coded vs uncoded,
+plus one dense-vs-sparse A/B at the largest size: the dense `_reduce_plan`
+path materializes K [n, n] float32 buffers per iteration, the sparse path
+none - full (non-smoke) mode asserts the >= 10x acceptance speedup at
+n ~ 4096, K = 10, r = 3 and bit-exactness against the sparse oracle.
+
+The smoke rows are the committed `BENCH_scale.json` baseline; CI fails if a
+smoke row's wall-clock regresses by more than 2x (benchmarks/
+check_regression.py).
+"""
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core import graph_models as gm
+from repro.core.allocation import divisible_n, er_allocation
+from repro.core.shuffle_plan import compile_plan
+
+SMOKE_CASES = [(120, 4, 2, 0.08), (360, 4, 2, 0.05)]
+FULL_CASES = [(1024, 10, 3, 0.02), (2048, 10, 3, 0.01), (4096, 10, 3, 0.01)]
+
+
+def _timed(prog, g, alloc, iters, mode, plan, path):
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    res = engine.run(prog, g, alloc, iters, mode=mode, plan=plan, path=path)
+    dt = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return res, dt, peak
+
+
+def run(report, smoke=False):
+    prog = algo.pagerank()
+    iters = 3 if smoke else 10
+    rows = []
+    for n_req, K, r, p in (SMOKE_CASES if smoke else FULL_CASES):
+        n = divisible_n(n_req, K, r)
+        g = gm.erdos_renyi(n, p, seed=7)
+        alloc = er_allocation(n, K, r)
+        plan = compile_plan(g.adj, alloc)
+        plan.edge_tables(g.csr, alloc)         # bind CSR once (compile side)
+        prog.map_edge_values(g, prog.init(g))  # warm degree/CSR caches
+        row = {"n": n, "K": K, "r": r, "edges": g.num_edges}
+        for mode in ("uncoded", "coded"):
+            res, dt, peak = _timed(prog, g, alloc, iters, mode, plan, "sparse")
+            row[mode] = {"s_per_iter": dt / iters, "peak_mb": peak / 1e6,
+                         "load": res.normalized_load}
+            report(f"scale_pagerank_{mode}_n{n}", dt / iters * 1e6,
+                   f"edges={g.num_edges} peak_mb={peak / 1e6:.2f} "
+                   f"load={res.normalized_load:.4f}")
+        rows.append(row)
+
+    # Dense-vs-sparse A/B at the largest size (the acceptance point when
+    # not smoking: n ~ 4096, K = 10, r = 3, 10-iteration coded PageRank).
+    # g/alloc/plan are the last row's, reused - same seed, same realization.
+    n = rows[-1]["n"]
+    sp, t_sparse, peak_sparse = _timed(prog, g, alloc, iters, "coded", plan,
+                                       "sparse")
+    dn, t_dense, peak_dense = _timed(prog, g, alloc, iters, "coded", plan,
+                                     "dense")
+    assert sp.shuffle_bits == dn.shuffle_bits, "path load accounting diverged"
+    np.testing.assert_allclose(sp.state, dn.state, rtol=1e-6)
+    oracle = algo.reference_run(prog, g, iters)
+    assert np.array_equal(sp.state, oracle), "sparse != sparse oracle"
+    speedup = t_dense / t_sparse
+    if not smoke:
+        assert speedup >= 10.0, f"acceptance: sparse only {speedup:.1f}x"
+        assert peak_sparse < n * n * 4, "sparse peak reached dense-buffer size"
+    report(f"scale_dense_vs_sparse_n{n}", t_sparse / iters * 1e6,
+           f"dense_s={t_dense:.3f} sparse_s={t_sparse:.3f} "
+           f"speedup={speedup:.1f}x peak_dense_mb={peak_dense / 1e6:.1f} "
+           f"peak_sparse_mb={peak_sparse / 1e6:.2f}")
+    return {"rows": rows, "speedup": speedup,
+            "peak_sparse_mb": peak_sparse / 1e6,
+            "peak_dense_mb": peak_dense / 1e6}

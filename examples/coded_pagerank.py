@@ -4,7 +4,8 @@ re-created, plus the fault-tolerance story (DESIGN.md SS5).
 Reproduces the shape of Fig. 7: total-time model T(r) = r*T_map + T_shuffle/r
 fitted from measured per-phase loads, optimal r* = sqrt(T_shuffle/T_map)
 (Remark 10), and a mid-run server failure that the r-fold Map redundancy
-absorbs with zero re-Mapping.
+absorbs with zero re-Mapping. Runs on the sparse O(edges) engine path, so n
+in the thousands is cheap - and still bit-exact against the oracle.
 
     PYTHONPATH=src python examples/coded_pagerank.py
 """
@@ -17,7 +18,7 @@ from repro.core.allocation import divisible_n, er_allocation
 from repro.core.loads import optimal_r, total_time_model
 
 K, p, iters = 6, 0.15, 3
-n = divisible_n(420, K, 3)
+n = divisible_n(1260, K, 3)
 g = gm.erdos_renyi(n, p, seed=7)
 prog = algo.pagerank()
 oracle = algo.reference_run(prog, g, iters)

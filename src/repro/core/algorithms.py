@@ -1,11 +1,34 @@
 """Vertex programs expressed as MapReduce pairs (paper §II-A, Examples 1-2).
 
-An algorithm supplies:
+An algorithm supplies two interchangeable forms of the same Map/Reduce pair:
+
+Dense form (the paper-literal oracle, O(n^2) per iteration):
   map_values(graph, state)  -> V [n, n] float32 where V[i, j] = g_{i,j}(w_j)
                                for (i, j) in E (garbage elsewhere; the engine
                                masks with the adjacency),
   reduce(vals, mask, state) -> new state from each vertex's neighbor values,
   identity                  -> the padding value that is absorbing for reduce.
+
+Edge-value form (the O(edges) execution path; all four built-ins supply it):
+  map_edge_values(graph, state)        -> [nnz] float32, one value per CSR
+                                          entry e = (i, j), equal bitwise to
+                                          map_values(...)[i, j],
+  reduce_edges(vals, indptr, state, g) -> new state via a segment reduction
+                                          over the CSR rows (np.add.reduceat /
+                                          np.minimum.reduceat).
+
+Contract: each execution path must match the *same-form* single-machine
+oracle (`reference_run(path=...)`) bitwise - the sparse engine accumulates
+every row in canonical CSR entry order, so distributed == oracle exactly.
+Across forms, min-reductions (sssp, cc) and integer sums (degree) are also
+bitwise equal; pagerank's float sum legitimately differs by reduction order
+(dense row-sum vs sequential reduceat), within a few ulp.
+
+Programs whose Map value depends only on the source vertex and whose Reduce
+is a plain sum (pagerank, degree) additionally expose `map_source` ([n]
+per-source values) and `finalize` (elementwise epilogue), which lets the
+engine route the blocked row reduction through the kernels/spmv Pallas tiles
+(`backend="spmv"`).
 
 The dense-matrix form is the blocked-dense TPU adaptation (DESIGN.md §3): a
 PageRank Map over a vertex block is one column-scaled adjacency tile, and the
@@ -28,6 +51,35 @@ class VertexProgram:
     init: Callable[[Graph], np.ndarray]
     map_values: Callable[[Graph, np.ndarray], np.ndarray]
     reduce: Callable[[np.ndarray, np.ndarray, np.ndarray, Graph], np.ndarray]
+    # Edge-value (sparse) form; None => program only supports the dense path.
+    map_edge_values: Callable[[Graph, np.ndarray], np.ndarray] | None = None
+    reduce_edges: Callable[[np.ndarray, np.ndarray, np.ndarray, Graph],
+                           np.ndarray] | None = None
+    # Linear-program extras for the blocked spmv backend (sum-reduce programs
+    # whose v_{i,j} depends only on source j): v_e = map_source(g, state)[j].
+    map_source: Callable[[Graph, np.ndarray], np.ndarray] | None = None
+    finalize: Callable[[np.ndarray, np.ndarray, Graph], np.ndarray] | None = None
+
+    @property
+    def supports_sparse(self) -> bool:
+        return (self.map_edge_values is not None
+                and self.reduce_edges is not None)
+
+
+def segment_reduce(ufunc, vals: np.ndarray, indptr: np.ndarray,
+                   identity: float) -> np.ndarray:
+    """`ufunc.reduceat` over CSR row segments; empty rows -> identity.
+
+    reduceat accumulates sequentially within a segment, so the reduction
+    order is the canonical CSR entry order - the bitwise contract shared by
+    the single-machine sparse oracle and the distributed sparse engine.
+    """
+    out = np.full(indptr.size - 1, identity, dtype=np.float32)
+    starts = indptr[:-1]
+    nonempty = indptr[1:] > starts
+    if vals.size:
+        out[nonempty] = ufunc.reduceat(vals, starts[nonempty])
+    return out
 
 
 def pagerank(damping: float = 0.15) -> VertexProgram:
@@ -36,16 +88,27 @@ def pagerank(damping: float = 0.15) -> VertexProgram:
     def init(g: Graph) -> np.ndarray:
         return np.full(g.n, 1.0 / g.n, dtype=np.float32)
 
-    def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
+    def map_source(g: Graph, state: np.ndarray) -> np.ndarray:
         deg = np.maximum(g.degrees(), 1)
-        contrib = (state / deg).astype(np.float32)     # per-source value
-        return np.broadcast_to(contrib[None, :], (g.n, g.n))
+        return (state / deg).astype(np.float32)       # per-source value
 
-    def reduce(vals, mask, state, g: Graph) -> np.ndarray:
-        acc = np.where(mask, vals, 0.0).sum(axis=1)
+    def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        return np.broadcast_to(map_source(g, state)[None, :], (g.n, g.n))
+
+    def map_edge_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        return map_source(g, state)[g.csr.indices]
+
+    def finalize(acc: np.ndarray, state: np.ndarray, g: Graph) -> np.ndarray:
         return ((1.0 - damping) * acc + damping / g.n).astype(np.float32)
 
-    return VertexProgram("pagerank", 0.0, init, map_values, reduce)
+    def reduce(vals, mask, state, g: Graph) -> np.ndarray:
+        return finalize(np.where(mask, vals, 0.0).sum(axis=1), state, g)
+
+    def reduce_edges(vals, indptr, state, g: Graph) -> np.ndarray:
+        return finalize(segment_reduce(np.add, vals, indptr, 0.0), state, g)
+
+    return VertexProgram("pagerank", 0.0, init, map_values, reduce,
+                         map_edge_values, reduce_edges, map_source, finalize)
 
 
 def sssp(source: int = 0) -> VertexProgram:
@@ -60,11 +123,21 @@ def sssp(source: int = 0) -> VertexProgram:
         w = g.weights()
         return (state[None, :] + w.T).astype(np.float32)   # t(j, i) = w[j, i]
 
+    def map_edge_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        # w is symmetric and edge_weights() shares one draw per undirected
+        # edge, so state[j] + w_e == the dense (i, j) entry bitwise.
+        return (state[g.csr.indices] + g.edge_weights()).astype(np.float32)
+
     def reduce(vals, mask, state, g: Graph) -> np.ndarray:
         vals = np.where(mask, vals, np.inf)
         return np.minimum(state, vals.min(axis=1, initial=np.inf)).astype(np.float32)
 
-    return VertexProgram("sssp", np.inf, init, map_values, reduce)
+    def reduce_edges(vals, indptr, state, g: Graph) -> np.ndarray:
+        m = segment_reduce(np.minimum, vals, indptr, np.inf)
+        return np.minimum(state, m).astype(np.float32)
+
+    return VertexProgram("sssp", np.inf, init, map_values, reduce,
+                         map_edge_values, reduce_edges)
 
 
 def connected_components() -> VertexProgram:
@@ -76,11 +149,19 @@ def connected_components() -> VertexProgram:
     def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
         return np.broadcast_to(state[None, :], (g.n, g.n)).astype(np.float32)
 
+    def map_edge_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        return state[g.csr.indices].astype(np.float32)
+
     def reduce(vals, mask, state, g: Graph) -> np.ndarray:
         vals = np.where(mask, vals, np.inf)
         return np.minimum(state, vals.min(axis=1, initial=np.inf)).astype(np.float32)
 
-    return VertexProgram("cc", np.inf, init, map_values, reduce)
+    def reduce_edges(vals, indptr, state, g: Graph) -> np.ndarray:
+        m = segment_reduce(np.minimum, vals, indptr, np.inf)
+        return np.minimum(state, m).astype(np.float32)
+
+    return VertexProgram("cc", np.inf, init, map_values, reduce,
+                         map_edge_values, reduce_edges)
 
 
 def degree_count() -> VertexProgram:
@@ -89,19 +170,50 @@ def degree_count() -> VertexProgram:
     def init(g: Graph) -> np.ndarray:
         return np.zeros(g.n, dtype=np.float32)
 
+    def map_source(g: Graph, state: np.ndarray) -> np.ndarray:
+        return np.ones(g.n, dtype=np.float32)
+
     def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
         return np.ones((g.n, g.n), dtype=np.float32)
 
+    def map_edge_values(g: Graph, state: np.ndarray) -> np.ndarray:
+        return np.ones(g.csr.nnz, dtype=np.float32)
+
+    def finalize(acc: np.ndarray, state: np.ndarray, g: Graph) -> np.ndarray:
+        return acc.astype(np.float32)
+
     def reduce(vals, mask, state, g: Graph) -> np.ndarray:
-        return np.where(mask, vals, 0.0).sum(axis=1).astype(np.float32)
+        return finalize(np.where(mask, vals, 0.0).sum(axis=1), state, g)
 
-    return VertexProgram("degree", 0.0, init, map_values, reduce)
+    def reduce_edges(vals, indptr, state, g: Graph) -> np.ndarray:
+        return finalize(segment_reduce(np.add, vals, indptr, 0.0), state, g)
+
+    return VertexProgram("degree", 0.0, init, map_values, reduce,
+                         map_edge_values, reduce_edges, map_source, finalize)
 
 
-def reference_run(program: VertexProgram, g: Graph, iters: int) -> np.ndarray:
-    """Single-machine oracle: the engine (any mode) must match this exactly."""
+def reference_run(program: VertexProgram, g: Graph, iters: int,
+                  path: str = "auto") -> np.ndarray:
+    """Single-machine oracle: the engine (any mode) must match this exactly.
+
+    path="sparse" (or "auto" when the program has an edge-value form) runs
+    the O(edges) form; path="dense" runs the paper-literal [n, n] form. Each
+    engine path is bit-exact against the *same-path* oracle; see the module
+    docstring for the cross-path contract.
+    """
+    if path not in ("auto", "sparse", "dense"):
+        raise ValueError(f"unknown path {path!r}")
+    if path == "sparse" and not program.supports_sparse:
+        raise ValueError(f"{program.name} has no edge-value (sparse) form")
+    sparse = path != "dense" and program.supports_sparse
     state = program.init(g)
-    for _ in range(iters):
-        vals = program.map_values(g, state)
-        state = program.reduce(vals, g.adj, state, g)
+    if sparse:
+        indptr = g.csr.indptr
+        for _ in range(iters):
+            vals = program.map_edge_values(g, state).astype(np.float32)
+            state = program.reduce_edges(vals, indptr, state, g)
+    else:
+        for _ in range(iters):
+            vals = program.map_values(g, state)
+            state = program.reduce(vals, g.adj, state, g)
     return state

@@ -11,6 +11,26 @@ a `ShufflePlan` once and replays it every iteration (compile-once /
 execute-many); the schedule-completeness check that used to run per iteration
 now runs once at compile time inside `compile_plan`.
 
+Execution paths (`path=` argument):
+  sparse (default when the program has an edge-value form) - one iteration is
+      O(edges + plan) in time and memory: Map emits a [nnz] edge-value vector
+      in CSR order, the plan's sparse executors move exactly the scheduled
+      entries, and the Reduce is one gather (local CSR slice + delivery
+      arrays, via the plan's precompiled edge-order gather table) followed by
+      a segment reduction. Because the gather lands every row's values in
+      canonical CSR entry order, the distributed result is bitwise equal to
+      the sparse single-machine oracle (`reference_run(path="sparse")`).
+  dense - the paper-literal [n, n] form, kept as the validation oracle (and
+      the only path for programs without an edge-value form). Bitwise equal
+      to `reference_run(path="dense")`. Cross-path, sum-programs (pagerank)
+      may differ by float reduction order within a few ulp; min/integer
+      programs are bitwise identical (see algorithms.py).
+
+Reduce backends (sparse path): `backend="numpy"` segment-reduces with
+reduceat; `backend="spmv"` routes the row reduction of linear programs
+(pagerank, degree) through the kernels/spmv Pallas kernel in [bm, n] blocked
+strips, so the TPU path exercises real MXU tiles at O(bm*n) memory.
+
 Modes:
   single      - oracle, no distribution.
   uncoded     - baseline unicast shuffle   (load ~ p(1 - r/K)).
@@ -18,7 +38,7 @@ Modes:
   coded-fast  - same schedule/loads via the compiled plan, values moved
                 directly (skips the XOR simulation; used for large sweeps).
   coded-ref   - the literal per-group reference (`coded_shuffle.run_coded`),
-                kept for A/B validation and benchmarking against the plan.
+                dict delivery and dense reduce; kept for A/B validation.
 """
 from __future__ import annotations
 
@@ -80,10 +100,12 @@ def _reduce_distributed(program: VertexProgram, g: Graph, alloc: Allocation,
 def _reduce_plan(program: VertexProgram, g: Graph, alloc: Allocation,
                  values: np.ndarray, res: PlanShuffleResult,
                  state: np.ndarray) -> np.ndarray:
-    """Array-delivery Reduce: scatter each server's CSR slice, no dicts.
+    """Array-delivery dense Reduce: scatter each server's CSR slice.
 
-    Schedule completeness was verified once at plan-compile time, so the
-    per-iteration missing-value scan of the dict path is not repeated here.
+    O(K n^2) per iteration - the reference the sparse path is validated and
+    benchmarked against (`path="dense"`). Schedule completeness was verified
+    once at plan-compile time, so the per-iteration missing-value scan of the
+    dict path is not repeated here.
     """
     new_state = np.empty_like(state)
     for k in range(alloc.K):
@@ -98,18 +120,115 @@ def _reduce_plan(program: VertexProgram, g: Graph, alloc: Allocation,
     return new_state
 
 
+def _reduce_sparse(program: VertexProgram, g: Graph, edge_vals: np.ndarray,
+                   res: PlanShuffleResult, gather: np.ndarray,
+                   state: np.ndarray) -> np.ndarray:
+    """Gather-then-segment-reduce over all servers at once, O(edges).
+
+    Each CSR entry's value comes from its owner's locally-Mapped slice or
+    its delivery slot (the precompiled `gather` table encodes which); the
+    gathered vector is in canonical CSR entry order, so the segment
+    reduction is bitwise identical to the sparse single-machine oracle.
+    """
+    buf = np.concatenate([edge_vals, res.values])
+    return program.reduce_edges(buf[gather], g.csr.indptr, state, g)
+
+
+def _reduce_spmv(program: VertexProgram, g: Graph, state: np.ndarray, *,
+                 bm: int = 128, interpret: bool = True) -> np.ndarray:
+    """Blocked row reduction through the kernels/spmv Pallas kernel.
+
+    Valid for linear programs (v_{i,j} = map_source(g, state)[j], Reduce =
+    sum + elementwise finalize): acc = adj @ c computed strip-by-strip from
+    the CSR view at O(bm * n) memory. Kernel float accumulation order
+    differs from reduceat, so this backend is tolerance- (not bit-) exact.
+    """
+    from ..kernels.spmv import ops as spmv_ops
+
+    c = program.map_source(g, state)
+    acc = spmv_ops.spmv_csr_rows(g.csr.indptr, g.csr.indices, c, g.n,
+                                 rows=g.csr.rows, bm=bm, interpret=interpret)
+    return program.finalize(acc, state, g)
+
+
+def _use_sparse(program: VertexProgram, mode: str, path: str) -> bool:
+    if path not in ("auto", "sparse", "dense"):
+        raise ValueError(f"unknown path {path!r}")
+    if mode not in PLAN_MODES + ("single", "coded-ref"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "coded-ref":
+        if path == "sparse":
+            raise ValueError("coded-ref is the dense dict-delivery reference")
+        return False
+    if path == "sparse" and not program.supports_sparse:
+        raise ValueError(f"{program.name} has no edge-value (sparse) form")
+    return path != "dense" and program.supports_sparse
+
+
+def _plan_bits(plan: ShufflePlan, mode: str) -> int:
+    """Bits-on-the-wire of one Shuffle: schedule-only, data-independent."""
+    if mode == "coded":
+        return plan.coded_bits + plan.leftover_bits
+    if mode == "coded-fast":
+        return plan.coded_bits
+    return plan.uncoded_bits
+
+
 def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
         iters: int, mode: str = "coded",
-        plan: ShufflePlan | None = None) -> EngineResult:
+        plan: ShufflePlan | None = None, *, path: str = "auto",
+        backend: str = "numpy",
+        backend_opts: dict | None = None) -> EngineResult:
     """Execute `iters` rounds; plan modes compile the Shuffle schedule once
-    and replay it (pass a pre-compiled `plan` to amortize across runs)."""
+    and replay it (pass a pre-compiled `plan` to amortize across runs).
+
+    `path` picks the execution form (see module docstring); "auto" resolves
+    to sparse whenever the program supplies the edge-value form. `backend`
+    ("numpy" | "spmv") selects the sparse Reduce implementation;
+    `backend_opts` is forwarded to it (spmv: `bm`, `interpret` - pass
+    ``{"interpret": False}`` on real TPU hardware).
+    """
+    backend_opts = backend_opts or {}
+    sparse = _use_sparse(program, mode, path)
+    if backend not in ("numpy", "spmv"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "spmv":
+        if not sparse:
+            raise ValueError("backend='spmv' requires the sparse path")
+        if program.map_source is None or program.finalize is None:
+            raise ValueError(
+                f"{program.name} is not linear (no map_source/finalize); "
+                "backend='spmv' needs a per-source Map and a sum Reduce")
     state = program.init(g)
     total_bits = 0
     distributed = mode != "single" and alloc is not None
     if distributed and mode in PLAN_MODES and plan is None:
         # Uncoded only consumes the missing set; skip the column tables.
         plan = compile_plan(g.adj, alloc, schedule=mode != "uncoded")
+    tables = None
+    if sparse and distributed and mode in PLAN_MODES:
+        tables = plan.edge_tables(g.csr, alloc)
     for _ in range(iters):
+        if sparse:
+            if backend == "spmv":
+                # Coverage was verified when `tables` was built, so the
+                # blocked kernel reads each owner's full CSR row slice; the
+                # shuffled values would be recomputed per-source anyway, so
+                # only the (schedule-only) bit accounting is added.
+                if distributed:
+                    total_bits += _plan_bits(plan, mode)
+                state = _reduce_spmv(program, g, state, **backend_opts)
+                continue
+            edge_vals = program.map_edge_values(g, state).astype(np.float32)
+            if not distributed:
+                state = program.reduce_edges(edge_vals, g.csr.indptr,
+                                             state, g)
+                continue
+            res = plan.execute_sparse(edge_vals, mode, tables)
+            total_bits += res.bits_sent
+            state = _reduce_sparse(program, g, edge_vals, res,
+                                   tables.gather, state)
+            continue
         values = program.map_values(g, state).astype(np.float32)
         if not distributed:
             state = program.reduce(values, g.adj, state, g)

@@ -59,22 +59,44 @@ def run_with_failure(program: VertexProgram, g: Graph, alloc: Allocation,
     the degraded allocation shuffles uncoded (a real deployment would rebuild
     the coded schedule for K' = K - |failed| at the next checkpoint; see
     rebalance()).
+
+    Programs with an edge-value form run the O(edges) sparse path (one
+    missing-set plan compiled per allocation epoch); others fall back to the
+    dense dict-delivery reference. Bit accounting is identical either way.
     """
+    from .engine import _reduce_sparse
+    from .shuffle_plan import compile_plan
     from .uncoded_shuffle import run_uncoded
 
     state = program.init(g)
     total_bits = 0
     degraded, stats = degrade_allocation(alloc, failed)
     recovery_bits = 0
+    sparse = program.supports_sparse
+    if sparse:
+        # Compile only the epochs that actually run (plan compilation does a
+        # full O(n^2) edge scan; fail_at_iter=0 never uses the pre plan).
+        plan_pre = (compile_plan(g.adj, alloc, schedule=False)
+                    if fail_at_iter > 0 else None)
+        plan_post = (compile_plan(g.adj, degraded, schedule=False)
+                     if fail_at_iter < iters else None)
     for it in range(iters):
         alloc_now = alloc if it < fail_at_iter else degraded
-        values = program.map_values(g, state).astype(np.float32)
-        res = run_uncoded(g.adj, values, alloc_now)
+        if sparse:
+            plan_now = plan_pre if it < fail_at_iter else plan_post
+            tables = plan_now.edge_tables(g.csr, alloc_now)
+            edge_vals = program.map_edge_values(g, state).astype(np.float32)
+            res = plan_now.execute_uncoded_sparse(edge_vals, tables)
+            state = _reduce_sparse(program, g, edge_vals, res, tables.gather,
+                                   state)
+        else:
+            values = program.map_values(g, state).astype(np.float32)
+            res = run_uncoded(g.adj, values, alloc_now)
+            state = _reduce_distributed(program, g, alloc_now, values,
+                                        res.delivered, state)
         if it == fail_at_iter:
             recovery_bits = res.bits_sent  # first post-failure shuffle = recovery
         total_bits += res.bits_sent
-        state = _reduce_distributed(program, g, alloc_now, values,
-                                    res.delivered, state)
     result = EngineResult(state, iters, total_bits, f"failover-{len(failed)}")
     return result, dataclasses.replace(stats, recovery_bits=recovery_bits)
 

@@ -1,14 +1,43 @@
 """Random graph samplers for the four models studied in the paper.
 
 All samplers return a dense symmetric boolean adjacency matrix (no self loops),
-which is the representation the validation-scale engine and the blocked-dense
-TPU kernels consume (see DESIGN.md §7.1).
+which is the representation the validation-scale dense oracle and the
+blocked-dense TPU kernels consume (see DESIGN.md §7.1). Every `Graph` also
+carries a cached CSR view (`csr`, `degrees()`, `edge_weights()`): the sparse
+O(edges) engine path works exclusively off that view, so per-iteration cost
+and memory never touch O(n^2) buffers (the dense `adj`/`weights()` matrices
+are only materialized by the dense reference path).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed-sparse-row view of a symmetric adjacency.
+
+    One entry per *directed* edge (i, j), in `np.nonzero(adj)` order: row
+    major, ascending column within each row. That canonical entry order is
+    the bitwise contract of the sparse path - every segment reduction
+    (single-machine oracle or distributed engine) accumulates each row's
+    values in exactly this order.
+    """
+
+    indptr: np.ndarray       # [n+1] int64 row offsets
+    indices: np.ndarray      # [nnz] int32 column (source vertex j) per entry
+    rows: np.ndarray         # [nnz] int32 row (destination vertex i) per entry
+
+    @property
+    def n(self) -> int:
+        return self.indptr.size - 1
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,19 +54,63 @@ class Graph:
 
     @property
     def num_edges(self) -> int:
-        return int(self.adj.sum()) // 2
+        return self.csr.nnz // 2
+
+    @functools.cached_property
+    def csr(self) -> CSR:
+        """Cached CSR view of `adj` (built once per instance)."""
+        rows, cols = np.nonzero(self.adj)
+        counts = np.bincount(rows, minlength=self.n)
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSR(indptr, cols.astype(np.int32), rows.astype(np.int32))
 
     def degrees(self) -> np.ndarray:
-        return self.adj.sum(axis=1)
+        """[n] int64 vertex degrees (cached; one CSR diff, not an O(n^2)
+        row-sum per call as before)."""
+        d = self.__dict__.get("_degrees")
+        if d is None:
+            d = np.diff(self.csr.indptr)
+            self.__dict__["_degrees"] = d
+        return d
 
-    def weights(self, rng: np.random.Generator | None = None,
-                low: float = 0.5, high: float = 1.5) -> np.ndarray:
-        """Symmetric positive edge weights (for SSSP); +inf on non-edges."""
-        rng = rng or np.random.default_rng(0)
-        w = rng.uniform(low, high, size=self.adj.shape)
-        w = np.triu(w, 1)
-        w = w + w.T
-        return np.where(self.adj, w, np.inf)
+    def edge_weights(self, low: float = 0.5, high: float = 1.5) -> np.ndarray:
+        """[nnz] float64 positive edge weights in CSR entry order (for SSSP).
+
+        One uniform draw per *undirected* edge, in canonical upper-triangle
+        CSR order, shared bit-for-bit by both directed entries - so
+        ``weights()[i, j] == edge_weights()[e]`` exactly for the CSR entry
+        e = (i, j), and the sparse SSSP path is bitwise consistent with the
+        dense oracle. O(edges) time and memory; cached per (low, high).
+        """
+        key = ("_edge_weights", float(low), float(high))
+        w = self.__dict__.get(key)
+        if w is None:
+            csr = self.csr
+            i64 = csr.rows.astype(np.int64)
+            j64 = csr.indices.astype(np.int64)
+            ukey = np.minimum(i64, j64) * self.n + np.maximum(i64, j64)
+            upper = i64 < j64         # upper-tri entries: ukey already sorted
+            rng = np.random.default_rng(0)
+            w_upper = rng.uniform(low, high, size=int(np.count_nonzero(upper)))
+            w = w_upper[np.searchsorted(ukey[upper], ukey)]
+            self.__dict__[key] = w
+        return w
+
+    def weights(self, low: float = 0.5, high: float = 1.5) -> np.ndarray:
+        """Dense [n, n] scatter of `edge_weights()`; +inf on non-edges.
+
+        Cached per (low, high): SSSP's dense map used to regenerate this
+        O(n^2) matrix every iteration. Only the dense reference path calls
+        it - the sparse path consumes `edge_weights()` directly.
+        """
+        key = ("_weights", float(low), float(high))
+        w = self.__dict__.get(key)
+        if w is None:
+            w = np.full((self.n, self.n), np.inf)
+            w[self.csr.rows, self.csr.indices] = self.edge_weights(low, high)
+            self.__dict__[key] = w
+        return w
 
 
 def _symmetrize(upper: np.ndarray) -> np.ndarray:

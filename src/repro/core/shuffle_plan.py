@@ -18,6 +18,12 @@ per-value Python dict bookkeeping. This module factors that schedule out:
 Everything is bit-exact against the literal reference; `tests/
 test_shuffle_plan.py` asserts equality of delivered values AND bits sent.
 
+Sparse execution: `edge_tables(csr, alloc)` binds a compiled plan to a CSR
+view once - CSR entry indices for every scheduled value plus the per-server
+reduce gather table - after which `execute_*_sparse` replay the Shuffle from
+a [nnz] edge-value vector and the engine Reduces by segment without ever
+materializing a dense [n, n] buffer (see `engine.py`).
+
 Schedule derivation (why no subset enumeration is needed): a missing value
 (i, j) of Reducer k has batch T = subsets[batch_of[j]] with k not in T, and
 the unique (r+1)-group covering it is S = T u {k}. Enumerating the C(K, r+1)
@@ -36,12 +42,14 @@ bits-on-the-wire, depend only on the schedule and are summed at compile time.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 from .allocation import Allocation
 from .bitcodec import (T_BITS, floats_to_words, segment_bounds, segment_words,
                        words_to_floats)
+from .graph_models import CSR
 
 
 @dataclasses.dataclass
@@ -65,13 +73,49 @@ class PlanShuffleResult:
         """Definition 2: total bits / (n^2 T)."""
         return self.bits_sent / (self.n * self.n * T_BITS)
 
-    @property
+    @functools.cached_property
     def delivered(self) -> dict[int, dict[tuple[int, int], float]]:
+        """Legacy per-value dict layout, built once and cached (tests and
+        the coded-ref comparison path access it repeatedly)."""
         out: dict[int, dict[tuple[int, int], float]] = {
             k: {} for k in range(len(self.ptr) - 1)}
         for k, i, j, v in zip(self.k, self.i, self.j, self.values):
             out[int(k)][(int(i), int(j))] = float(v)
         return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEdgeTables:
+    """CSR bindings of a compiled plan: every executor gather in O(edges).
+
+    `pair_e`/`left_e`/`all_e` map each scheduled value to its CSR entry, so
+    the sparse executors index a [nnz] edge-value vector instead of a dense
+    [n, n] matrix. `gather` is the per-server reduce table flattened into
+    canonical CSR entry order: entry e of row i (Reduced by k) reads from
+    `concat(edge_vals, delivered.values)[gather[e]]` - the Map output when k
+    Mapped column j locally, the delivery slot otherwise. Completeness of
+    the schedule is re-verified edge-wise when the table is built.
+    """
+
+    pair_e: np.ndarray           # [P] int64 CSR entry of each covered pair
+    left_e: np.ndarray           # [L] int64 CSR entry of each unicast leftover
+    all_e: np.ndarray            # [M] int64 CSR entry of each delivered value
+    gather: np.ndarray           # [nnz] int64 into concat(edge_vals, values)
+
+
+def _locate_edges(csr: CSR, i: np.ndarray, j: np.ndarray) -> np.ndarray:
+    """CSR entry index of each (i, j); raises if any pair is not an edge."""
+    n = csr.n
+    key = csr.rows.astype(np.int64) * n + csr.indices
+    q = i.astype(np.int64) * n + j.astype(np.int64)
+    e = np.searchsorted(key, q)
+    ok = (e < key.size) & (key[np.minimum(e, key.size - 1)] == q)
+    if not ok.all():
+        bad = np.flatnonzero(~ok)[:5]
+        raise RuntimeError(
+            f"scheduled values are not edges of this CSR, e.g. pairs "
+            f"{list(zip(i[bad].tolist(), j[bad].tolist()))}")
+    return e
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,10 +197,9 @@ class ShufflePlan:
 
     # ---- per-iteration executors ----
 
-    def _slot_words(self, values: np.ndarray) -> np.ndarray:
+    def _slot_words(self, pair_vals: np.ndarray) -> np.ndarray:
         """[C, r] pre-masked left-aligned segment words for this iteration."""
-        vals = values[self.pair_i, self.pair_j]
-        words = np.append(floats_to_words(vals), np.uint32(0))  # sentinel row
+        words = np.append(floats_to_words(pair_vals), np.uint32(0))  # sentinel
         return (words[self.slot_pair] << self.slot_shift) & self.slot_mask
 
     def execute_coded(self, values: np.ndarray, *, backend: str = "numpy",
@@ -169,7 +212,15 @@ class ShufflePlan:
           "xor-ref"    - same route through the jnp reference (kernel oracle).
         """
         self._require_schedule()
-        slotw = self._slot_words(values)
+        return self._coded_result(values[self.pair_i, self.pair_j],
+                                  values[self.left_i, self.left_j],
+                                  backend=backend, interpret=interpret)
+
+    def _coded_result(self, pair_vals: np.ndarray, left_vals: np.ndarray, *,
+                      backend: str = "numpy",
+                      interpret: bool = True) -> PlanShuffleResult:
+        """Coded encode/decode from already-gathered scheduled values."""
+        slotw = self._slot_words(pair_vals)
         if backend == "numpy":
             coded = np.bitwise_xor.reduce(slotw, axis=1)
             # Receiver's strip = XOR of the other slots (locally
@@ -190,23 +241,26 @@ class ShufflePlan:
         pair_words = np.bitwise_or.reduce(segs, axis=1)
         out = np.empty(self.all_k.size, dtype=np.float32)
         out[self.pos_covered] = words_to_floats(pair_words)
-        out[self.pos_left] = values[self.left_i, self.left_j]
+        out[self.pos_left] = left_vals
         bits = self.coded_bits + self.leftover_bits
+        return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
+                                 self.ptr, bits, self.n)
+
+    def _direct_result(self, vals: np.ndarray, bits: int) -> PlanShuffleResult:
+        out = np.ascontiguousarray(vals, np.float32)
         return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
                                  self.ptr, bits, self.n)
 
     def execute_fast(self, values: np.ndarray) -> PlanShuffleResult:
         """Coded loads with direct value movement (legacy "coded-fast")."""
         self._require_schedule()
-        out = np.ascontiguousarray(values[self.all_i, self.all_j], np.float32)
-        return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
-                                 self.ptr, self.coded_bits, self.n)
+        return self._direct_result(values[self.all_i, self.all_j],
+                                   self.coded_bits)
 
     def execute_uncoded(self, values: np.ndarray) -> PlanShuffleResult:
         """Baseline unicast Shuffle off the same compiled missing set."""
-        out = np.ascontiguousarray(values[self.all_i, self.all_j], np.float32)
-        return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
-                                 self.ptr, self.uncoded_bits, self.n)
+        return self._direct_result(values[self.all_i, self.all_j],
+                                   self.uncoded_bits)
 
     def execute(self, values: np.ndarray, mode: str) -> PlanShuffleResult:
         if mode == "coded":
@@ -215,6 +269,80 @@ class ShufflePlan:
             return self.execute_fast(values)
         if mode == "uncoded":
             return self.execute_uncoded(values)
+        raise ValueError(f"unknown plan mode {mode!r}")
+
+    # ---- sparse (O(edges)) executors ----
+
+    def edge_tables(self, csr: CSR, alloc: Allocation) -> PlanEdgeTables:
+        """Bind this plan to a CSR view (cached on the plan).
+
+        Locates every scheduled value's CSR entry and builds the reduce
+        gather table (see `PlanEdgeTables`); raises if any Reducer would be
+        left without a source for one of its edges - the edge-wise
+        counterpart of the compile-time `_validate` scan.
+        """
+        cached = self.__dict__.get("_edge_tables")
+        if cached is not None:
+            c_csr, c_alloc, tables = cached
+            if c_csr is csr and c_alloc is alloc:
+                return tables
+            # Re-bound to a different (csr, alloc): rebuild rather than
+            # silently serving stale gather tables.
+        pair_e = _locate_edges(csr, self.pair_i, self.pair_j)
+        left_e = _locate_edges(csr, self.left_i, self.left_j)
+        all_e = _locate_edges(csr, self.all_i, self.all_j)
+        # Reduce gather: local Map output where the owner Mapped the source,
+        # the (k, i, j)-sorted delivery slot otherwise.
+        n = np.int64(self.n)
+        owners = alloc.reduce_owner[csr.rows]
+        local = alloc.map_sets[owners, csr.indices]
+        gather = np.arange(csr.nnz, dtype=np.int64)
+        missing = ~local
+        all_key = ((self.all_k.astype(np.int64) * n + self.all_i) * n
+                   + self.all_j)
+        need_key = ((owners[missing].astype(np.int64) * n
+                     + csr.rows[missing]) * n + csr.indices[missing])
+        pos = np.searchsorted(all_key, need_key)
+        ok = (pos < all_key.size) & (all_key[np.minimum(pos, all_key.size - 1)]
+                                     == need_key)
+        if not ok.all():
+            miss = np.flatnonzero(missing)[~ok][:5]
+            raise RuntimeError(
+                f"schedule incomplete: no delivery for CSR entries "
+                f"{list(zip(csr.rows[miss].tolist(), csr.indices[miss].tolist()))}")
+        gather[missing] = csr.nnz + pos
+        tables = PlanEdgeTables(pair_e, left_e, all_e, gather)
+        self.__dict__["_edge_tables"] = (csr, alloc, tables)
+        return tables
+
+    def execute_coded_sparse(self, edge_vals: np.ndarray,
+                             tables: PlanEdgeTables, *,
+                             backend: str = "numpy",
+                             interpret: bool = True) -> PlanShuffleResult:
+        """Coded Shuffle from a [nnz] edge-value vector; bit-exact against
+        `execute_coded` on the dense scatter of the same values."""
+        self._require_schedule()
+        return self._coded_result(edge_vals[tables.pair_e],
+                                  edge_vals[tables.left_e],
+                                  backend=backend, interpret=interpret)
+
+    def execute_fast_sparse(self, edge_vals: np.ndarray,
+                            tables: PlanEdgeTables) -> PlanShuffleResult:
+        self._require_schedule()
+        return self._direct_result(edge_vals[tables.all_e], self.coded_bits)
+
+    def execute_uncoded_sparse(self, edge_vals: np.ndarray,
+                               tables: PlanEdgeTables) -> PlanShuffleResult:
+        return self._direct_result(edge_vals[tables.all_e], self.uncoded_bits)
+
+    def execute_sparse(self, edge_vals: np.ndarray, mode: str,
+                       tables: PlanEdgeTables) -> PlanShuffleResult:
+        if mode == "coded":
+            return self.execute_coded_sparse(edge_vals, tables)
+        if mode == "coded-fast":
+            return self.execute_fast_sparse(edge_vals, tables)
+        if mode == "uncoded":
+            return self.execute_uncoded_sparse(edge_vals, tables)
         raise ValueError(f"unknown plan mode {mode!r}")
 
 

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .ref import spmv as spmv_ref
 from .spmv import spmv_pallas
@@ -33,3 +34,36 @@ def pagerank_step(adj: jnp.ndarray, rank: jnp.ndarray, damping: float = 0.15,
     deg = jnp.maximum(adj.sum(axis=0), 1.0)
     acc = spmv(adj, rank / deg, **kw)
     return (1.0 - damping) * acc + damping / adj.shape[0]
+
+
+def spmv_csr_rows(indptr: np.ndarray, indices: np.ndarray, c: np.ndarray,
+                  n: int, *, rows: np.ndarray | None = None, bm: int = 128,
+                  bk: int = 128, use_kernel: bool = True,
+                  interpret: bool = True) -> np.ndarray:
+    """acc[i] = sum_{j in row i} c[j] from a CSR adjacency, via the Pallas
+    kernel in blocked [bm, n] row strips.
+
+    The dense strip is densified from the CSR slice per block, so peak
+    memory is O(bm * n) regardless of the row count - the sparse engine's
+    `backend="spmv"` Reduce route. Every strip shares one compiled kernel
+    (fixed [bm, n_pad] shape; the trailing partial strip is zero-padded).
+    Pass the cached per-entry `rows` array (e.g. `Graph.csr.rows`) to avoid
+    rebuilding it per call.
+    """
+    n_pad = n + (-n) % bk
+    cj = jnp.asarray(np.pad(np.asarray(c, np.float32), (0, n_pad - n)))
+    acc = np.empty(n, dtype=np.float32)
+    if rows is None:
+        rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    for start in range(0, n, bm):
+        stop = min(start + bm, n)
+        strip = np.zeros((bm, n_pad), dtype=np.float32)
+        a, b = int(indptr[start]), int(indptr[stop])
+        strip[rows[a:b] - start, indices[a:b]] = 1.0
+        if use_kernel:
+            y = spmv_pallas(jnp.asarray(strip), cj, bm=bm, bk=bk,
+                            interpret=interpret)
+        else:
+            y = spmv_ref(jnp.asarray(strip), cj)
+        acc[start:stop] = np.asarray(y)[:stop - start]
+    return acc

@@ -14,13 +14,16 @@ PROGRAMS = [algo.pagerank(), algo.sssp(0), algo.connected_components(),
 
 @pytest.mark.parametrize("prog", PROGRAMS, ids=lambda p: p.name)
 @pytest.mark.parametrize("mode", ["uncoded", "coded", "coded-fast"])
-def test_engine_matches_oracle_er(prog, mode):
+@pytest.mark.parametrize("path", ["auto", "dense"])
+def test_engine_matches_oracle_er(prog, mode, path):
+    """Each execution path must be bitwise equal to its same-path oracle
+    ("auto" resolves to the sparse O(edges) form for the built-ins)."""
     K, r = 5, 2
     n = divisible_n(50, K, r)
     g = gm.erdos_renyi(n, 0.2, seed=11)
     alloc = er_allocation(n, K, r)
-    ref = algo.reference_run(prog, g, 4)
-    res = engine.run(prog, g, alloc, 4, mode=mode)
+    ref = algo.reference_run(prog, g, 4, path=path)
+    res = engine.run(prog, g, alloc, 4, mode=mode, path=path)
     np.testing.assert_array_equal(res.state, ref)
 
 

@@ -125,27 +125,37 @@ def test_plan_covers_random_allocation():
 
 def test_plan_engine_modes_match_oracle_with_spill():
     """bipartite r > K2 forces unicast leftovers (phase-III spill); the plan
-    engine must still match the oracle and the legacy reference bits."""
+    engine must still match the oracle and the legacy reference bits.
+
+    Each engine path is compared against its *same-path* oracle (the coded
+    plan runs sparse by default, coded-ref is the dense dict reference);
+    cross-path float sums differ only by reduction order (see algorithms.py).
+    """
     g = gm.stochastic_block(48, 24, 0.25, 0.1, seed=5)
     alloc = bipartite_allocation(48, 24, 6, 3)
     plan = compile_plan(g.adj, alloc)
     assert plan.left_k.size > 0
     prog = algo.pagerank()
-    ref = algo.reference_run(prog, g, 3)
     res = engine.run(prog, g, alloc, 3, mode="coded")
     legacy = engine.run(prog, g, alloc, 3, mode="coded-ref")
-    np.testing.assert_array_equal(res.state, ref)
-    np.testing.assert_array_equal(legacy.state, ref)
+    np.testing.assert_array_equal(res.state, algo.reference_run(prog, g, 3))
+    np.testing.assert_array_equal(
+        legacy.state, algo.reference_run(prog, g, 3, path="dense"))
     assert res.shuffle_bits == legacy.shuffle_bits
 
 
 def test_plan_engine_bits_match_legacy_reference():
     g, alloc = _er_case(5, 3, n0=40, p=0.2)
     prog = algo.pagerank()
-    res = engine.run(prog, g, alloc, 2, mode="coded")
     legacy = engine.run(prog, g, alloc, 2, mode="coded-ref")
-    np.testing.assert_array_equal(res.state, legacy.state)
-    assert res.shuffle_bits == legacy.shuffle_bits
+    # Same dense Reduce => bitwise state equality with the dict reference.
+    res_dense = engine.run(prog, g, alloc, 2, mode="coded", path="dense")
+    np.testing.assert_array_equal(res_dense.state, legacy.state)
+    assert res_dense.shuffle_bits == legacy.shuffle_bits
+    # The sparse path moves the same bits (state compared to its own oracle
+    # elsewhere; float sums cross paths differ by reduction order only).
+    res_sparse = engine.run(prog, g, alloc, 2, mode="coded")
+    assert res_sparse.shuffle_bits == legacy.shuffle_bits
 
 
 @pytest.mark.parametrize("backend", ["xor-ref", "xor-kernel"])

@@ -1,0 +1,227 @@
+"""Sparse O(edges) engine path: oracle parity, memory, backends, caches.
+
+Contract under test (see algorithms.py / engine.py docstrings):
+  * every plan mode on the sparse path is *bitwise* equal to the sparse
+    single-machine oracle, for all four vertex programs on all four graph
+    models (the distributed gather reduces each row in canonical CSR order);
+  * the sparse oracle matches the dense oracle bitwise for min-reduce and
+    integer-sum programs (sssp, cc, degree) and to float-reduction-order
+    tolerance for pagerank;
+  * one sparse iteration never materializes a dense [n, n] buffer, and beats
+    the dense `_reduce_plan` path outright at n ~ 1000+.
+"""
+import dataclasses
+import time
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core import graph_models as gm
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation)
+from repro.core.shuffle_plan import compile_plan
+
+PROGRAMS = [algo.pagerank(), algo.sssp(0), algo.connected_components(),
+            algo.degree_count()]
+PLAN_MODES = ["uncoded", "coded", "coded-fast"]
+
+
+def _case(model):
+    """(graph, allocation) per graph model, cached at module scope."""
+    if model == "er":
+        n = divisible_n(48, 4, 2)
+        return gm.erdos_renyi(n, 0.2, seed=11), er_allocation(n, 4, 2)
+    if model == "pl":
+        n = divisible_n(60, 4, 2)
+        return gm.power_law(n, 2.5, seed=9), er_allocation(n, 4, 2)
+    if model == "rb":
+        return (gm.random_bipartite(48, 24, 0.3, seed=5),
+                bipartite_allocation(48, 24, 6, 2))
+    if model == "sbm":
+        return (gm.stochastic_block(48, 24, 0.25, 0.1, seed=5),
+                bipartite_allocation(48, 24, 6, 2))
+    raise ValueError(model)
+
+
+_CASES = {m: _case(m) for m in ("er", "rb", "sbm", "pl")}
+
+
+@pytest.mark.parametrize("prog", PROGRAMS, ids=lambda p: p.name)
+@pytest.mark.parametrize("model", ["er", "rb", "sbm", "pl"])
+@pytest.mark.parametrize("mode", PLAN_MODES)
+def test_sparse_engine_bitwise_matches_sparse_oracle(prog, model, mode):
+    g, alloc = _CASES[model]
+    ref = algo.reference_run(prog, g, 3, path="sparse")
+    res = engine.run(prog, g, alloc, 3, mode=mode, path="sparse")
+    np.testing.assert_array_equal(res.state, ref)
+
+
+@pytest.mark.parametrize("prog", PROGRAMS, ids=lambda p: p.name)
+@pytest.mark.parametrize("model", ["er", "rb", "sbm", "pl"])
+def test_sparse_oracle_vs_dense_oracle(prog, model):
+    g, _ = _CASES[model]
+    ref_s = algo.reference_run(prog, g, 3, path="sparse")
+    ref_d = algo.reference_run(prog, g, 3, path="dense")
+    if prog.name == "pagerank":
+        # Float sums legitimately differ by reduction order (dense row-sum
+        # vs sequential reduceat): documented tolerance, not bitwise.
+        np.testing.assert_allclose(ref_s, ref_d, rtol=1e-6, atol=1e-12)
+    else:
+        # min-reductions (sssp, cc) and integer sums (degree) are
+        # order-independent, hence bitwise equal across paths.
+        np.testing.assert_array_equal(ref_s, ref_d)
+
+
+@pytest.mark.parametrize("mode", PLAN_MODES)
+def test_sparse_and_dense_engine_agree_on_bits(mode):
+    g, alloc = _CASES["er"]
+    prog = algo.pagerank()
+    a = engine.run(prog, g, alloc, 2, mode=mode, path="sparse")
+    b = engine.run(prog, g, alloc, 2, mode=mode, path="dense")
+    assert a.shuffle_bits == b.shuffle_bits
+    np.testing.assert_allclose(a.state, b.state, rtol=1e-6, atol=1e-12)
+
+
+def test_sparse_path_never_materializes_dense_buffer():
+    """At n ~ 2k one [n, n] float32 is ~17 MB; the whole sparse iteration
+    (Map + coded Shuffle + Reduce) must stay well under that."""
+    K, r = 4, 2
+    n = divisible_n(2048, K, r)
+    g = gm.erdos_renyi(n, 0.01, seed=7)
+    alloc = er_allocation(n, K, r)
+    plan = compile_plan(g.adj, alloc)
+    plan.edge_tables(g.csr, alloc)                  # bind CSR (compile side)
+    prog = algo.pagerank()
+    prog.map_edge_values(g, prog.init(g))           # warm degree/CSR caches
+    tracemalloc.start()
+    res = engine.run(prog, g, alloc, 2, mode="coded", plan=plan,
+                     path="sparse")
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < n * n * 4, f"peak {peak / 1e6:.1f}MB reached dense size"
+    np.testing.assert_array_equal(res.state, algo.reference_run(prog, g, 2))
+
+
+def test_sparse_path_faster_than_dense_reduce():
+    """Timing sanity (loose: the dense path does O(K n^2) work per iteration
+    vs O(edges); at n ~ 1000 that is a >100x gap, so 2x is never flaky)."""
+    K, r, iters = 4, 2, 3
+    n = divisible_n(1024, K, r)
+    g = gm.erdos_renyi(n, 0.05, seed=3)
+    alloc = er_allocation(n, K, r)
+    plan = compile_plan(g.adj, alloc)
+    prog = algo.pagerank()
+    for path in ("sparse", "dense"):                # warm both paths
+        engine.run(prog, g, alloc, 1, mode="coded", plan=plan, path=path)
+    t0 = time.perf_counter()
+    engine.run(prog, g, alloc, iters, mode="coded", plan=plan, path="sparse")
+    t_sparse = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    engine.run(prog, g, alloc, iters, mode="coded", plan=plan, path="dense")
+    t_dense = time.perf_counter() - t0
+    assert t_dense > 2 * t_sparse, (t_sparse, t_dense)
+
+
+@pytest.mark.parametrize("prog", [algo.pagerank(), algo.degree_count()],
+                         ids=lambda p: p.name)
+@pytest.mark.parametrize("mode", ["single", "coded-fast"])
+def test_spmv_backend_matches_numpy_reduce(prog, mode):
+    """Blocked Pallas spmv Reduce: tolerance-exact (MXU accumulation order
+    differs from reduceat) and same bits on the wire."""
+    K, r = 4, 2
+    n = divisible_n(100, K, r)
+    g = gm.erdos_renyi(n, 0.2, seed=3)
+    alloc = er_allocation(n, K, r)
+    a = engine.run(prog, g, alloc, 2, mode=mode)
+    b = engine.run(prog, g, alloc, 2, mode=mode, backend="spmv")
+    np.testing.assert_allclose(a.state, b.state, rtol=1e-5, atol=1e-8)
+    assert a.shuffle_bits == b.shuffle_bits
+
+
+def test_spmv_backend_rejects_nonlinear_programs():
+    g, alloc = _CASES["er"]
+    with pytest.raises(ValueError, match="not linear"):
+        engine.run(algo.sssp(0), g, alloc, 1, backend="spmv")
+    with pytest.raises(ValueError, match="sparse"):
+        engine.run(algo.pagerank(), g, alloc, 1, path="dense",
+                   backend="spmv")
+
+
+def test_dense_only_program_falls_back_and_sparse_is_refused():
+    g, alloc = _CASES["er"]
+    dense_only = dataclasses.replace(algo.pagerank(), map_edge_values=None,
+                                     reduce_edges=None)
+    res = engine.run(dense_only, g, alloc, 2, mode="coded")   # auto -> dense
+    np.testing.assert_array_equal(
+        res.state, algo.reference_run(dense_only, g, 2, path="dense"))
+    with pytest.raises(ValueError, match="edge-value"):
+        engine.run(dense_only, g, alloc, 1, path="sparse")
+    with pytest.raises(ValueError, match="coded-ref"):
+        engine.run(algo.pagerank(), g, alloc, 1, mode="coded-ref",
+                   path="sparse")
+
+
+def test_faults_sparse_path_matches_dense_fallback():
+    """run_with_failure must deliver the same bits and (order-independent
+    program) bitwise state on both its sparse path and its dict fallback."""
+    from repro.core import faults
+
+    g, alloc = _CASES["er"]
+    prog = algo.degree_count()
+    dense_only = dataclasses.replace(prog, map_edge_values=None,
+                                     reduce_edges=None)
+    a, sa = faults.run_with_failure(prog, g, alloc, 3, failed=(1,),
+                                    fail_at_iter=1)
+    b, sb = faults.run_with_failure(dense_only, g, alloc, 3, failed=(1,),
+                                    fail_at_iter=1)
+    np.testing.assert_array_equal(a.state, b.state)
+    assert a.shuffle_bits == b.shuffle_bits
+    assert sa.recovery_bits == sb.recovery_bits
+
+
+def test_plan_delivered_dict_is_cached():
+    g, alloc = _CASES["er"]
+    plan = compile_plan(g.adj, alloc)
+    vals = np.where(g.adj, 1.5, 0.0).astype(np.float32)
+    res = plan.execute_coded(vals)
+    assert res.delivered is res.delivered           # built once, reused
+
+
+def test_graph_csr_and_caches():
+    g, _ = _CASES["er"]
+    assert g.csr is g.csr
+    assert g.degrees() is g.degrees()
+    assert g.weights() is g.weights()
+    csr = g.csr
+    np.testing.assert_array_equal(np.diff(csr.indptr),
+                                  g.adj.sum(axis=1))
+    np.testing.assert_array_equal(g.adj[csr.rows, csr.indices],
+                                  np.ones(csr.nnz, bool))
+    assert csr.nnz == 2 * g.num_edges
+
+
+def test_edge_weights_bitwise_consistent_with_dense():
+    g, _ = _CASES["er"]
+    w = g.weights()
+    ew = g.edge_weights()
+    # Dense scatter of the edge weights, symmetric, +inf off-edges.
+    np.testing.assert_array_equal(w[g.csr.rows, g.csr.indices], ew)
+    np.testing.assert_array_equal(w, w.T)
+    assert np.isinf(w[~g.adj]).all()
+    assert ((ew > 0.5) & (ew < 1.5)).all()
+
+
+def test_sparse_map_values_bitwise_match_dense_entries():
+    """map_edge_values must equal the dense map on every edge, bitwise."""
+    for prog in PROGRAMS:
+        for model in ("er", "sbm"):
+            g, _ = _CASES[model]
+            state = prog.init(g)
+            dense = np.asarray(prog.map_values(g, state), np.float32)
+            sparse = prog.map_edge_values(g, state).astype(np.float32)
+            np.testing.assert_array_equal(
+                dense[g.csr.rows, g.csr.indices].view(np.uint32),
+                sparse.view(np.uint32), err_msg=f"{prog.name}/{model}")
