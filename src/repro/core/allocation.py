@@ -11,6 +11,7 @@ surplus Reducers of the larger cluster onto the first server group.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
 
@@ -56,16 +57,28 @@ class Allocation:
         """Definition 1: sum_k |M_k| / n."""
         return float(self.map_sets.sum()) / self.n
 
+    @functools.cached_property
+    def _subset_index(self) -> dict[tuple[int, ...], int]:
+        """subset -> batch index, built once (replaces O(C(K, r)) tuple
+        scans in `batch_vertices`)."""
+        return {s: b for b, s in enumerate(self.subsets)}
+
     def batch_vertices(self, subset: tuple[int, ...]) -> np.ndarray:
-        b = self.subsets.index(tuple(sorted(subset)))
+        b = self._subset_index.get(tuple(sorted(subset)))
+        if b is None:
+            raise ValueError(f"{subset} is not a batch subset")
         return np.flatnonzero(self.batch_of == b)
 
 
-def er_allocation(n: int, K: int, r: int, interleave: bool = False) -> Allocation:
+def er_allocation(n: int, K: int, r: int, interleave: bool = False,
+                  pad: bool = False) -> Allocation:
     """The paper's §IV-A allocation for the ER model.
 
     Requires n divisible by C(K, r) and by K (paper Remark 1); use
-    divisible_n() to round up first.
+    divisible_n() to round up first, or pass pad=True to round up here -
+    the returned allocation then has `alloc.n = divisible_n(n, K, r)` and
+    the graph must be padded to match with virtual isolated vertices
+    (`Graph.padded(alloc.n)`), so arbitrary real-graph n is accepted.
 
     interleave=True assigns vertices to batches round-robin instead of in
     contiguous blocks - a beyond-paper refinement that homogenizes per-group
@@ -78,9 +91,12 @@ def er_allocation(n: int, K: int, r: int, interleave: bool = False) -> Allocatio
     subsets = batch_subsets(K, r)
     c = len(subsets)
     if n % c or n % K:
-        raise ValueError(
-            f"n={n} must be divisible by C({K},{r})={c} and K={K}; "
-            f"use divisible_n -> {divisible_n(n, K, r)}")
+        if pad:
+            n = divisible_n(n, K, r)
+        else:
+            raise ValueError(
+                f"n={n} must be divisible by C({K},{r})={c} and K={K}; "
+                f"use divisible_n -> {divisible_n(n, K, r)} (or pad=True)")
     g = n // c
     if interleave:
         batch_of = np.arange(n) % c
@@ -137,8 +153,9 @@ def random_allocation(n: int, K: int, r: int, seed: int = 0) -> Allocation:
     subsets = batch_subsets(K, r)
     batch_of = rng.integers(0, len(subsets), size=n)
     map_sets = np.zeros((K, n), dtype=bool)
-    for v in range(n):
-        for k in subsets[batch_of[v]]:
-            map_sets[k, v] = True
+    # One scatter instead of the n x r Python loop: vertex v is Mapped at
+    # every member of its batch's subset (all subsets have size r here).
+    members = np.asarray(subsets, dtype=np.int64)[batch_of]      # [n, r]
+    map_sets[members.ravel(), np.repeat(np.arange(n), r)] = True
     reduce_owner = rng.integers(0, K, size=n)
     return Allocation(n, K, r, tuple(subsets), batch_of, map_sets, reduce_owner)

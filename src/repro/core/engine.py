@@ -51,7 +51,7 @@ from .allocation import Allocation
 from .bitcodec import T_BITS
 from .coded_shuffle import run_coded
 from .graph_models import Graph
-from .shuffle_plan import PlanShuffleResult, ShufflePlan, compile_plan
+from .shuffle_plan import PlanShuffleResult, ShufflePlan, compile_plan_csr
 from .uncoded_shuffle import missing_pairs
 
 PLAN_MODES = ("uncoded", "coded", "coded-fast")
@@ -204,7 +204,9 @@ def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
     distributed = mode != "single" and alloc is not None
     if distributed and mode in PLAN_MODES and plan is None:
         # Uncoded only consumes the missing set; skip the column tables.
-        plan = compile_plan(g.adj, alloc, schedule=mode != "uncoded")
+        # CSR entry point: adjacency-free and schedule-identical to the
+        # dense compile, so CSR-native graphs never materialize [n, n].
+        plan = compile_plan_csr(g.csr, alloc, schedule=mode != "uncoded")
     tables = None
     if sparse and distributed and mode in PLAN_MODES:
         tables = plan.edge_tables(g.csr, alloc)

@@ -65,7 +65,7 @@ def run_with_failure(program: VertexProgram, g: Graph, alloc: Allocation,
     dense dict-delivery reference. Bit accounting is identical either way.
     """
     from .engine import _reduce_sparse
-    from .shuffle_plan import compile_plan
+    from .shuffle_plan import compile_plan_csr
     from .uncoded_shuffle import run_uncoded
 
     state = program.init(g)
@@ -74,11 +74,11 @@ def run_with_failure(program: VertexProgram, g: Graph, alloc: Allocation,
     recovery_bits = 0
     sparse = program.supports_sparse
     if sparse:
-        # Compile only the epochs that actually run (plan compilation does a
-        # full O(n^2) edge scan; fail_at_iter=0 never uses the pre plan).
-        plan_pre = (compile_plan(g.adj, alloc, schedule=False)
+        # Compile only the epochs that actually run, adjacency-free off the
+        # CSR view (fail_at_iter=0 never uses the pre plan).
+        plan_pre = (compile_plan_csr(g.csr, alloc, schedule=False)
                     if fail_at_iter > 0 else None)
-        plan_post = (compile_plan(g.adj, degraded, schedule=False)
+        plan_post = (compile_plan_csr(g.csr, degraded, schedule=False)
                      if fail_at_iter < iters else None)
     for it in range(iters):
         alloc_now = alloc if it < fail_at_iter else degraded

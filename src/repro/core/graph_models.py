@@ -1,12 +1,38 @@
-"""Random graph samplers for the four models studied in the paper.
+"""Graph representation (CSR-primary) plus the legacy dense samplers.
 
-All samplers return a dense symmetric boolean adjacency matrix (no self loops),
-which is the representation the validation-scale dense oracle and the
-blocked-dense TPU kernels consume (see DESIGN.md §7.1). Every `Graph` also
-carries a cached CSR view (`csr`, `degrees()`, `edge_weights()`): the sparse
-O(edges) engine path works exclusively off that view, so per-iteration cost
-and memory never touch O(n^2) buffers (the dense `adj`/`weights()` matrices
-are only materialized by the dense reference path).
+CSR-primary contract
+--------------------
+`Graph` stores one of two representations of the same undirected simple
+graph and derives the other lazily:
+
+  * **CSR-native** (`Graph.from_csr` / `Graph.from_edges`, what the
+    `repro.graphs` samplers and loaders produce): only `(indptr, indices)`
+    live in memory - O(edges). This is the production representation; the
+    whole sparse pipeline (Map -> compiled Shuffle -> segment Reduce, see
+    `engine.py`) consumes nothing else, so graphs of n >= 1e5 run end to
+    end without any [n, n] buffer ever existing.
+  * **dense** (`Graph(adj, model, params)`, what the legacy samplers below
+    return): the [n, n] boolean adjacency the paper-literal validation
+    oracle and the blocked-dense TPU kernels consume. The CSR view is
+    derived (and cached) on first use.
+
+Dense materialization is *guarded*: accessing `adj` / `weights()` /
+`to_dense()` on a CSR-native graph raises above `dense_limit` vertices
+(default `DENSE_LIMIT`), so a stray dense touch on a large graph is a loud
+error instead of a silent 10+ GB allocation. Below the guard the dense view
+is materialized lazily - small-n A/B tests rely on that to compare the
+sparse path against the dense oracle.
+
+Bitwise per-path oracle rule: the canonical CSR entry order (row major,
+ascending column - exactly `np.nonzero(adj)` order) is the reduction order
+of the sparse path, so every distributed sparse run is *bitwise* equal to
+the sparse single-machine oracle, and every dense run to the dense oracle;
+across paths only float sums (pagerank) may differ, by reduction order
+within ulp (see `algorithms.py`).
+
+Samplers: the dense O(n^2) samplers below are the legacy/validation
+reference. Their O(edges) streaming counterparts - statistically
+equivalent, CSR-native, usable to n ~ 3e5+ - live in `repro.graphs`.
 """
 from __future__ import annotations
 
@@ -14,6 +40,10 @@ import dataclasses
 import functools
 
 import numpy as np
+
+# Vertices above which materializing any [n, n] view of a CSR-native graph
+# raises (20_000^2 bools = 400 MB; the sparse path never needs it).
+DENSE_LIMIT = 20_000
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,39 +70,152 @@ class CSR:
         return int(self.indices.size)
 
 
-@dataclasses.dataclass(frozen=True)
-class Graph:
-    """An undirected graph realization plus the model metadata."""
+def csr_from_undirected(u: np.ndarray, v: np.ndarray, n: int) -> CSR:
+    """Symmetric CSR from undirected edge endpoints (u[e], v[e]), u != v.
 
-    adj: np.ndarray          # [n, n] bool, symmetric, zero diagonal
-    model: str               # 'er' | 'rb' | 'sbm' | 'pl'
-    params: dict
+    Pairs must be unique as undirected edges (dedup first - see
+    `repro.graphs.io.normalize_edges`); both orientations are emitted and
+    sorted into the canonical entry order. O(edges log edges).
+    """
+    u = np.asarray(u, dtype=np.int64)
+    v = np.asarray(v, dtype=np.int64)
+    rows = np.concatenate([u, v])
+    cols = np.concatenate([v, u])
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    counts = np.bincount(rows, minlength=n)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSR(indptr, cols.astype(np.int32), rows.astype(np.int32))
+
+
+class Graph:
+    """An undirected graph realization plus the model metadata.
+
+    Construct densely (`Graph(adj, model, params)`) or CSR-natively
+    (`Graph.from_csr` / `Graph.from_edges`); see the module docstring for
+    the CSR-primary contract and the dense-materialization guard.
+    """
+
+    def __init__(self, adj: np.ndarray | None = None, model: str = "",
+                 params: dict | None = None, *, csr: CSR | None = None,
+                 dense_limit: int = DENSE_LIMIT):
+        if (adj is None) == (csr is None):
+            raise ValueError("construct from exactly one of adj= or csr=")
+        self.model = model
+        self.params = {} if params is None else params
+        self.dense_limit = int(dense_limit)
+        self._dense_built = adj is not None
+        if adj is not None:
+            adj = np.asarray(adj)
+            self._adj = adj if adj.dtype == bool else adj.astype(bool)
+            self._n = int(adj.shape[0])
+        else:
+            self._adj = None
+            self._n = csr.n
+            self.__dict__["csr"] = csr      # pre-fill the cached_property
+
+    # ---- constructors ----
+
+    @classmethod
+    def from_csr(cls, indptr: np.ndarray, indices: np.ndarray,
+                 model: str = "", params: dict | None = None, *,
+                 dense_limit: int = DENSE_LIMIT) -> "Graph":
+        """CSR-native graph from (indptr, indices); indices must be sorted
+        ascending within each row (the canonical entry order)."""
+        indptr = np.asarray(indptr, dtype=np.int64)
+        indices = np.asarray(indices, dtype=np.int32)
+        n = indptr.size - 1
+        rows = np.repeat(np.arange(n, dtype=np.int32), np.diff(indptr))
+        return cls(model=model, params=params,
+                   csr=CSR(indptr, indices, rows), dense_limit=dense_limit)
+
+    @classmethod
+    def from_edges(cls, u: np.ndarray, v: np.ndarray, n: int,
+                   model: str = "", params: dict | None = None, *,
+                   dense_limit: int = DENSE_LIMIT) -> "Graph":
+        """CSR-native graph from deduped undirected edge endpoint arrays."""
+        return cls(model=model, params=params,
+                   csr=csr_from_undirected(u, v, n), dense_limit=dense_limit)
+
+    def __repr__(self) -> str:
+        rep = "csr" if self._adj is None else "dense"
+        return (f"Graph(model={self.model!r}, n={self._n}, "
+                f"edges={self.num_edges}, {rep})")
+
+    # ---- representations ----
 
     @property
     def n(self) -> int:
-        return self.adj.shape[0]
+        return self._n
 
     @property
-    def num_edges(self) -> int:
-        return self.csr.nnz // 2
+    def is_csr_native(self) -> bool:
+        return self._adj is None
 
     @functools.cached_property
     def csr(self) -> CSR:
-        """Cached CSR view of `adj` (built once per instance)."""
-        rows, cols = np.nonzero(self.adj)
-        counts = np.bincount(rows, minlength=self.n)
-        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        """Cached CSR view (derived from `adj` for dense-built graphs)."""
+        rows, cols = np.nonzero(self._adj)
+        counts = np.bincount(rows, minlength=self._n)
+        indptr = np.zeros(self._n + 1, dtype=np.int64)
         np.cumsum(counts, out=indptr[1:])
         return CSR(indptr, cols.astype(np.int32), rows.astype(np.int32))
 
+    def _check_dense(self, what: str, limit: int | None = None) -> None:
+        limit = self.dense_limit if limit is None else limit
+        if self._n > limit:
+            raise ValueError(
+                f"{what} would materialize an [{self._n}, {self._n}] dense "
+                f"buffer (> dense_limit={limit}); the sparse path never "
+                f"needs it - stay on path='sparse', or force with "
+                f"to_dense(limit=...) for a validation-scale graph")
+
+    @property
+    def adj(self) -> np.ndarray:
+        """[n, n] bool adjacency; lazily materialized (and guarded) for
+        CSR-native graphs - only the dense validation path touches it."""
+        return self.to_dense()
+
+    def to_dense(self, limit: int | None = None) -> np.ndarray:
+        """Dense adjacency; `limit` overrides the construction-time
+        `dense_limit` guard for one deliberate materialization."""
+        if self._adj is None:
+            self._check_dense("dense adjacency", limit)
+            csr = self.csr
+            a = np.zeros((self._n, self._n), dtype=bool)
+            a[csr.rows, csr.indices] = True
+            self._adj = a
+        return self._adj
+
+    # ---- derived quantities (representation-agnostic, cached) ----
+
     def degrees(self) -> np.ndarray:
-        """[n] int64 vertex degrees (cached; one CSR diff, not an O(n^2)
-        row-sum per call as before)."""
+        """[n] int64 vertex degrees, from whichever representation already
+        exists (a dense-built graph is NOT forced through CSR construction
+        just to count its edges)."""
         d = self.__dict__.get("_degrees")
         if d is None:
-            d = np.diff(self.csr.indptr)
+            if "csr" in self.__dict__ or self._adj is None:
+                d = np.diff(self.csr.indptr)
+            else:
+                d = self._adj.sum(axis=1, dtype=np.int64)
             self.__dict__["_degrees"] = d
         return d
+
+    @property
+    def num_edges(self) -> int:
+        """Undirected edge count, via `degrees()` (no CSR side effects on
+        the dense path)."""
+        return int(self.degrees().sum()) // 2
+
+    @property
+    def density(self) -> float:
+        """Directed-entry density nnz / n^2 == `adj.mean()` of the dense
+        view (the empirical `p` the benchmarks report)."""
+        if self._n == 0:
+            return 0.0
+        return float(self.degrees().sum()) / (self._n * self._n)
 
     def edge_weights(self, low: float = 0.5, high: float = 1.5) -> np.ndarray:
         """[nnz] float64 positive edge weights in CSR entry order (for SSSP).
@@ -89,7 +232,7 @@ class Graph:
             csr = self.csr
             i64 = csr.rows.astype(np.int64)
             j64 = csr.indices.astype(np.int64)
-            ukey = np.minimum(i64, j64) * self.n + np.maximum(i64, j64)
+            ukey = np.minimum(i64, j64) * self._n + np.maximum(i64, j64)
             upper = i64 < j64         # upper-tri entries: ukey already sorted
             rng = np.random.default_rng(0)
             w_upper = rng.uniform(low, high, size=int(np.count_nonzero(upper)))
@@ -100,17 +243,44 @@ class Graph:
     def weights(self, low: float = 0.5, high: float = 1.5) -> np.ndarray:
         """Dense [n, n] scatter of `edge_weights()`; +inf on non-edges.
 
-        Cached per (low, high): SSSP's dense map used to regenerate this
-        O(n^2) matrix every iteration. Only the dense reference path calls
-        it - the sparse path consumes `edge_weights()` directly.
+        Cached per (low, high) and guarded like `adj` on CSR-native graphs
+        (even after a deliberate `to_dense(limit=...)` override - this
+        float64 view is 8x the bool adjacency); dense-*built* graphs
+        already opted into [n, n] views at construction, so the guard does
+        not block the legacy oracle path there. Only the dense reference
+        path calls this - the sparse path consumes `edge_weights()`.
         """
         key = ("_weights", float(low), float(high))
         w = self.__dict__.get(key)
         if w is None:
-            w = np.full((self.n, self.n), np.inf)
+            if not self._dense_built:
+                self._check_dense("weights()")
+            w = np.full((self._n, self._n), np.inf)
             w[self.csr.rows, self.csr.indices] = self.edge_weights(low, high)
             self.__dict__[key] = w
         return w
+
+    def padded(self, n2: int) -> "Graph":
+        """This graph plus `n2 - n` virtual isolated vertices (CSR-native).
+
+        Lets an arbitrary real-graph n meet the allocation's divisibility
+        requirement (`allocation.divisible_n`): isolated vertices have no
+        edges, hence no Map values, no Shuffle traffic, and no effect on
+        any other vertex's reduction order.
+        """
+        if n2 < self._n:
+            raise ValueError(f"cannot pad n={self._n} down to {n2}")
+        if n2 == self._n:
+            return self
+        csr = self.csr
+        indptr = np.concatenate([
+            csr.indptr,
+            np.full(n2 - self._n, csr.indptr[-1], dtype=np.int64)])
+        params = dict(self.params)
+        params["padded_from"] = self._n
+        return Graph(model=self.model, params=params,
+                     csr=CSR(indptr, csr.indices, csr.rows),
+                     dense_limit=self.dense_limit)
 
 
 def _symmetrize(upper: np.ndarray) -> np.ndarray:

@@ -373,14 +373,52 @@ def compile_plan(adj: np.ndarray, alloc: Allocation,
     `schedule=False` compiles only the missing set + per-server CSR (all the
     uncoded executor needs), skipping the column/slot table construction;
     the coded executors and load accounting then raise on use.
+
+    Adjacency-free entry point: `compile_plan_csr` compiles the *identical*
+    plan (same bits, same slot arrays) straight from a CSR view - the edge
+    pass below only consumes (row, column) streams, and `np.nonzero(adj)`
+    order is exactly the canonical CSR entry order.
     """
+    ii, jj = np.nonzero(adj)
+    plan = _compile_edges(ii, jj, alloc, schedule)
+    if validate:
+        _validate(plan, adj, alloc)
+    return plan
+
+
+def compile_plan_csr(csr: CSR, alloc: Allocation,
+                     validate: bool = True,
+                     schedule: bool = True) -> ShufflePlan:
+    """Compile the coded-Shuffle schedule from a CSR view, adjacency-free.
+
+    Schedule-identical (every plan array bitwise equal) to
+    `compile_plan(adj, alloc)` on the dense scatter of the same graph, but
+    never touches an [n, n] buffer - O(edges) time and memory, the entry
+    point the engine uses so CSR-native graphs at n >= 1e5 compile plans
+    without the dense view ever existing.
+    """
+    if csr.n != alloc.n:
+        raise ValueError(
+            f"graph has n={csr.n} vertices but the allocation expects "
+            f"n={alloc.n}; pad the graph with virtual isolated vertices "
+            f"first (Graph.padded / er_allocation(..., pad=True))")
+    plan = _compile_edges(csr.rows, csr.indices, alloc, schedule)
+    if validate:
+        _validate_csr(plan, csr, alloc)
+    return plan
+
+
+def _compile_edges(ii: np.ndarray, jj: np.ndarray, alloc: Allocation,
+                   schedule: bool) -> ShufflePlan:
+    """Shared compiler body: one vectorized pass over the (row, col) edge
+    streams, which both the dense and the CSR entry points supply in the
+    same canonical order."""
     K, r, n = alloc.K, alloc.r, alloc.n
     if K > 64:
         raise NotImplementedError("group bitmasks require K <= 64")
     seg_shift, seg_mask = segment_words(r)
 
     # --- missing triples, edge-driven ---
-    ii, jj = np.nonzero(adj)
     kk = alloc.reduce_owner[ii].astype(np.int32)
     miss = ~alloc.map_sets[kk, jj]
     ii = ii[miss].astype(np.int32)
@@ -393,7 +431,7 @@ def compile_plan(adj: np.ndarray, alloc: Allocation,
         all_k, all_i, all_j = kk[order], ii[order], jj[order]
         M = all_k.size
         empty = np.zeros(0, np.int32)
-        plan = ShufflePlan(
+        return ShufflePlan(
             n=n, K=K, r=r,
             pair_k=empty, pair_i=empty, pair_j=empty,
             col_width=None, col_sender=empty,
@@ -408,9 +446,6 @@ def compile_plan(adj: np.ndarray, alloc: Allocation,
             pos_covered=np.zeros(0, np.int64),
             pos_left=np.arange(M, dtype=np.int64),
             ptr=np.searchsorted(all_k, np.arange(K + 1)).astype(np.int64))
-        if validate:
-            _validate(plan, adj, alloc)
-        return plan
 
     subset_size = np.array([len(s) for s in alloc.subsets], dtype=np.int64)
     subset_mask = np.array([sum(1 << s for s in S) for S in alloc.subsets],
@@ -488,7 +523,7 @@ def compile_plan(adj: np.ndarray, alloc: Allocation,
     all_k, all_i, all_j = all_k[aorder], all_i[aorder], all_j[aorder]
     ptr = np.searchsorted(all_k, np.arange(K + 1)).astype(np.int64)
 
-    plan = ShufflePlan(
+    return ShufflePlan(
         n=n, K=K, r=r,
         pair_k=pair_k, pair_i=pair_i, pair_j=pair_j,
         col_width=col_width, col_sender=col_sender, col_gm=col_gm,
@@ -498,9 +533,6 @@ def compile_plan(adj: np.ndarray, alloc: Allocation,
         left_k=left_k, left_i=left_i, left_j=left_j,
         all_k=all_k, all_i=all_i, all_j=all_j,
         pos_covered=inv[:P], pos_left=inv[P:], ptr=ptr)
-    if validate:
-        _validate(plan, adj, alloc)
-    return plan
 
 
 def _validate(plan: ShufflePlan, adj: np.ndarray, alloc: Allocation) -> None:
@@ -516,7 +548,42 @@ def _validate(plan: ShufflePlan, adj: np.ndarray, alloc: Allocation) -> None:
             raise AssertionError(
                 f"server {k}: plan delivers {b - a} values, "
                 f"Reducer misses {len(need)} (or sets differ)")
-    if plan.pair_col.size == 0:
+    _validate_slots(plan)
+
+
+def _validate_csr(plan: ShufflePlan, csr: CSR, alloc: Allocation) -> None:
+    """Compile-time schedule check for CSR-compiled plans, O(K * edges).
+
+    Mirrors the dense `_validate` structure - one *per-server* re-derivation
+    in the row-mask formulation of `uncoded_shuffle.missing_pairs` - rather
+    than repeating the compiler's fused fancy-indexing pass, so an indexing
+    bug in `_compile_edges` is not reproduced verbatim by its own check.
+    Also verifies the covered/leftover partition and per-server offsets."""
+    total = 0
+    for k in range(alloc.K):
+        owns = (alloc.reduce_owner == k)[csr.rows]
+        need = owns & ~alloc.map_sets[k][csr.indices]
+        ii, jj = csr.rows[need], csr.indices[need]   # canonical (i, j) order
+        a, b = int(plan.ptr[k]), int(plan.ptr[k + 1])
+        if not (b - a == ii.size
+                and np.array_equal(plan.all_i[a:b], ii)
+                and np.array_equal(plan.all_j[a:b], jj)
+                and (plan.all_k[a:b] == k).all()):
+            raise AssertionError(
+                f"server {k}: plan delivers {b - a} values, "
+                f"Reducer misses {ii.size} (or sets differ)")
+        total += ii.size
+    assert total == plan.all_k.size, "per-server offsets leak entries"
+    pos = np.concatenate([plan.pos_covered, plan.pos_left])
+    assert pos.size == plan.all_k.size and np.array_equal(
+        np.sort(pos), np.arange(pos.size)), \
+        "covered/leftover positions do not partition the delivery set"
+    _validate_slots(plan)
+
+
+def _validate_slots(plan: ShufflePlan) -> None:
+    """Slot-table consistency of a scheduled plan (shared by both checks)."""
+    if not plan.has_schedule or plan.pair_col.size == 0:
         return
     # Each covered pair owns exactly its r slots, and the recovered segments
     # must tile the full 32-bit value.

@@ -1,0 +1,45 @@
+"""CSR-native graph subsystem: O(edges) samplers + real-dataset ingestion.
+
+This package is the production front door for graphs. Everything it
+produces is a CSR-native `core.graph_models.Graph` - only (indptr, indices)
+in memory - so the sparse engine path runs end to end at n >= 1e5 without
+any [n, n] buffer ever being allocated (the dense view stays behind the
+`DENSE_LIMIT` materialization guard; see `core.graph_models`).
+
+  * `samplers`: streaming counterparts of the four dense reference samplers
+    (ER via geometric edge-skipping, Chung-Lu power-law without the dense
+    outer product, SBM/RB as per-block ER).
+  * `io`: SNAP-style edge-list ingestion with a normalization pass (dedup,
+    symmetrize, self-loop strip, contiguous relabel, optional largest
+    connected component) plus the committed karate-club fixture.
+  * `allocate`: pads an arbitrary-n graph with virtual isolated vertices to
+    the allocation's divisibility requirement, so real datasets drop
+    straight into the coded engine.
+"""
+from __future__ import annotations
+
+from ..core.allocation import Allocation, er_allocation
+from ..core.graph_models import Graph
+from .io import (fixture_path, load_fixture, load_graph, normalize_edges,
+                 read_edge_list, write_edge_list)
+from .samplers import (erdos_renyi, power_law, random_bipartite, sample,
+                       stochastic_block)
+
+__all__ = [
+    "erdos_renyi", "random_bipartite", "stochastic_block", "power_law",
+    "sample", "read_edge_list", "normalize_edges", "load_graph",
+    "load_fixture", "fixture_path", "write_edge_list", "allocate",
+]
+
+
+def allocate(g: Graph, K: int, r: int,
+             interleave: bool = False) -> tuple[Graph, Allocation]:
+    """(padded graph, ER allocation) for an arbitrary-n graph.
+
+    Rounds n up to `divisible_n(n, K, r)` with virtual isolated vertices
+    (no edges -> no Map values, no Shuffle traffic), which is how real
+    datasets of awkward size meet the paper's Remark-1 divisibility
+    requirement. Returns the graph unchanged when n already divides.
+    """
+    alloc = er_allocation(g.n, K, r, interleave=interleave, pad=True)
+    return g.padded(alloc.n), alloc

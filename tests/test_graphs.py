@@ -1,0 +1,289 @@
+"""CSR-native graph subsystem: samplers, ingestion, CSR-primary Graph.
+
+Covers the `repro.graphs` package contract:
+  * streaming samplers are statistically equivalent to the legacy dense
+    reference samplers (edge-count concentration, power-law degree tail,
+    structural zeros for RB) while never allocating [n, n];
+  * the edge-list loader's normalization invariants (dedup, symmetrize,
+    self-loop strip, contiguous relabel, largest-CC) on the committed
+    karate fixture, plus write/load round-trips;
+  * the CSR-primary `Graph`: lazy guarded dense views, representation-
+    agnostic cached `degrees()`/`num_edges`/`density`, isolated-vertex
+    padding, and the vectorized allocation satellites.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core import graph_models as gm
+from repro.core.allocation import (divisible_n, er_allocation,
+                                   random_allocation)
+from repro.core.graph_models import CSR, Graph, csr_from_undirected
+
+# ---- samplers: statistical sanity + dense-sampler equivalence ----
+
+SEEDS = range(6)
+
+
+def _edge_stats(sampler, seeds, **kw):
+    return np.array([sampler(seed=s, **kw).num_edges for s in seeds],
+                    dtype=float)
+
+
+def test_er_edge_count_concentration():
+    n, p = 300, 0.06
+    N = n * (n - 1) // 2
+    sigma = math.sqrt(N * p * (1 - p))
+    counts = _edge_stats(graphs.erdos_renyi, SEEDS, n=n, p=p)
+    # Pooled mean within 5 pooled-sigma of the binomial expectation.
+    assert abs(counts.mean() - N * p) < 5 * sigma / math.sqrt(len(counts))
+
+
+@pytest.mark.parametrize("model,kw", [
+    ("er", dict(n=300, p=0.06)),
+    ("rb", dict(n1=150, n2=100, q=0.08)),
+    ("sbm", dict(n1=150, n2=100, p=0.15, q=0.05)),
+    ("pl", dict(n=400, gamma=2.5)),
+])
+def test_csr_sampler_statistically_matches_dense(model, kw):
+    """Same edge-probability law as the legacy dense sampler: mean edge
+    counts over seeds agree within 5 sigma of their pooled spread."""
+    a = _edge_stats(lambda seed: graphs.sample(model, seed=seed, **kw), SEEDS)
+    b = _edge_stats(lambda seed: gm.sample(model, seed=seed, **kw), SEEDS)
+    spread = max(a.std(), b.std(), 1.0) / math.sqrt(len(SEEDS))
+    assert abs(a.mean() - b.mean()) < 5 * math.sqrt(2) * spread, (a, b)
+
+
+def test_sbm_block_concentration():
+    n1, n2, p, q = 150, 100, 0.2, 0.05
+    g = graphs.stochastic_block(n1, n2, p, q, seed=3)
+    adj = g.adj
+    intra1 = adj[:n1, :n1].sum() // 2
+    intra2 = adj[n1:, n1:].sum() // 2
+    cross = adj[:n1, n1:].sum()
+    for count, trials, prob in [(intra1, n1 * (n1 - 1) // 2, p),
+                                (intra2, n2 * (n2 - 1) // 2, p),
+                                (cross, n1 * n2, q)]:
+        sigma = math.sqrt(trials * prob * (1 - prob))
+        assert abs(count - trials * prob) < 5 * sigma, (count, trials * prob)
+
+
+def test_rb_has_zero_intra_cluster_edges():
+    n1, n2 = 80, 50
+    g = graphs.random_bipartite(n1, n2, 0.2, seed=1)
+    csr = g.csr
+    side = csr.rows < n1
+    # Every edge crosses the cluster boundary - structural zeros intra.
+    assert (csr.indices[side] >= n1).all()
+    assert (csr.indices[~side] < n1).all()
+
+
+def test_power_law_degree_tail():
+    g = graphs.power_law(2000, 2.5, seed=2)
+    deg = g.degrees()
+    mean = deg.mean()
+    # Heavy tail: the max degree dwarfs the mean, but the tail mass is thin.
+    assert deg.max() > 8 * mean
+    assert (deg > 10 * mean).mean() < 0.02
+    assert mean > 1.0            # E[d] = (gamma-1)/(gamma-2) = 3 pre-clip
+
+
+@pytest.mark.parametrize("model,kw", [
+    ("er", dict(n=120, p=0.1)),
+    ("rb", dict(n1=60, n2=40, q=0.15)),
+    ("sbm", dict(n1=60, n2=40, p=0.2, q=0.05)),
+    ("pl", dict(n=150, gamma=2.5)),
+])
+def test_csr_samplers_are_simple_undirected(model, kw):
+    g = graphs.sample(model, seed=4, **kw)
+    adj = g.adj
+    assert (adj == adj.T).all()
+    assert not adj.diagonal().any()
+    assert g.csr.nnz == 2 * g.num_edges
+    # Canonical entry order: rows nondecreasing, columns ascending per row.
+    csr = g.csr
+    np.testing.assert_array_equal(
+        csr.rows, np.repeat(np.arange(g.n), np.diff(csr.indptr)))
+    for i in np.flatnonzero(np.diff(csr.indptr) > 1)[:10]:
+        seg = csr.indices[csr.indptr[i]:csr.indptr[i + 1]]
+        assert (np.diff(seg) > 0).all()
+
+
+# ---- edge-list ingestion ----
+
+
+def test_fixture_normalization_invariants():
+    """Raw fixture: 78 karate edges + comment noise, duplicate lines, one
+    self-loop, and a detached 3-vertex component with gapped labels."""
+    g = graphs.load_fixture(largest_cc=False)
+    assert g.n == 37 and g.num_edges == 80          # dedup + self-loop strip
+    labels = g.params["labels"]
+    np.testing.assert_array_equal(labels[:34], np.arange(1, 35))
+    np.testing.assert_array_equal(labels[34:], [101, 102, 105])
+    csr = g.csr
+    assert (csr.rows != csr.indices).all()          # no self-loops survive
+    adj = g.adj
+    assert (adj == adj.T).all()                      # symmetrized
+
+
+def test_fixture_largest_cc():
+    g = graphs.load_fixture()                        # largest_cc=True default
+    assert g.n == 34 and g.num_edges == 78
+    np.testing.assert_array_equal(g.params["labels"], np.arange(1, 35))
+    # Known karate degrees: hub 1 has 16 neighbors, hub 34 has 17.
+    assert g.degrees()[0] == 16 and g.degrees()[33] == 17
+    from repro.graphs.io import _components
+    csr = g.csr
+    assert (_components(csr.rows.astype(np.int64),
+                        csr.indices.astype(np.int64), g.n) == 0).all()
+
+
+def test_normalize_edges_dedup_symmetrize_relabel():
+    u = np.array([7, 3, 3, 9, 9, 7])
+    v = np.array([3, 7, 3, 7, 7, 9])                 # dups, reverse, loop
+    lo, hi, labels = graphs.normalize_edges(u, v)
+    np.testing.assert_array_equal(labels, [3, 7, 9])
+    got = set(zip(lo.tolist(), hi.tolist()))
+    assert got == {(0, 1), (1, 2)}                   # (3,7) and (7,9)
+
+
+def test_edge_list_round_trip(tmp_path):
+    g = graphs.erdos_renyi(90, 0.08, seed=13)
+    path = tmp_path / "er.edges"
+    graphs.write_edge_list(g, path, header="round-trip fixture")
+    g2 = graphs.load_graph(path)
+    np.testing.assert_array_equal(g.csr.indptr, g2.csr.indptr)
+    np.testing.assert_array_equal(g.csr.indices, g2.csr.indices)
+
+
+def test_read_edge_list_formats():
+    u, v = graphs.read_edge_list(["# c", "% c", "1 2", "3,4", "5 6 0.25"])
+    np.testing.assert_array_equal(u, [1, 3, 5])
+    np.testing.assert_array_equal(v, [2, 4, 6])
+    with pytest.raises(ValueError, match="two fields"):
+        graphs.read_edge_list(["7"])
+
+
+def test_degenerate_edge_lists():
+    g = graphs.load_graph(["# only comments", "5 5"])   # self-loop only
+    assert g.n == 0 and g.num_edges == 0
+    with pytest.raises(ValueError, match="no edges"):
+        graphs.load_graph(["# only comments", "5 5"], largest_cc=True)
+
+
+# ---- CSR-primary Graph ----
+
+
+def test_csr_native_matches_dense_built():
+    gc = graphs.erdos_renyi(100, 0.1, seed=6)
+    gd = Graph(gc.adj, gc.model, gc.params)          # small n: guard allows
+    np.testing.assert_array_equal(gc.csr.indptr, gd.csr.indptr)
+    np.testing.assert_array_equal(gc.csr.indices, gd.csr.indices)
+    np.testing.assert_array_equal(gc.degrees(), gd.degrees())
+    assert gc.num_edges == gd.num_edges
+    np.testing.assert_array_equal(gc.edge_weights(), gd.edge_weights())
+
+
+def test_dense_guard_raises_and_override():
+    g = graphs.erdos_renyi(64, 0.2, seed=1)
+    g_small_limit = Graph(model=g.model, params=g.params, csr=g.csr,
+                          dense_limit=10)
+    with pytest.raises(ValueError, match="dense_limit"):
+        g_small_limit.adj
+    with pytest.raises(ValueError, match="dense_limit"):
+        g_small_limit.weights()
+    a = g_small_limit.to_dense(limit=100)            # explicit override
+    np.testing.assert_array_equal(a, g.adj)
+    # One to_dense override must not open the (8x larger) float64
+    # weights() view on a CSR-native graph.
+    with pytest.raises(ValueError, match="dense_limit"):
+        g_small_limit.weights()
+    # Dense-*built* graphs already paid for [n, n]: the guard must not
+    # block their dense views (legacy oracle path above the limit).
+    g_dense = Graph(g.adj, g.model, g.params, dense_limit=10)
+    np.testing.assert_array_equal(g_dense.adj, g.adj)
+    assert np.isfinite(g_dense.weights()[g.adj]).all()
+
+
+def test_num_edges_and_density_no_csr_side_effect_on_dense_path():
+    g = gm.erdos_renyi(80, 0.15, seed=2)
+    m = g.num_edges
+    assert "csr" not in g.__dict__                   # counted via adj row-sums
+    assert g.density == g.adj.mean()
+    assert m == int(g.adj.sum()) // 2
+    # CSR built later must agree with the degree cache.
+    np.testing.assert_array_equal(g.degrees(), np.diff(g.csr.indptr))
+
+
+def test_graph_constructor_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        Graph()
+    with pytest.raises(ValueError, match="exactly one"):
+        Graph(np.zeros((2, 2), bool), csr=CSR(np.zeros(3, np.int64),
+                                              np.zeros(0, np.int32),
+                                              np.zeros(0, np.int32)))
+
+
+def test_csr_from_undirected_canonical_order():
+    csr = csr_from_undirected([2, 0], [1, 1], 3)
+    np.testing.assert_array_equal(csr.indptr, [0, 1, 3, 4])
+    np.testing.assert_array_equal(csr.indices, [1, 0, 2, 1])
+
+
+# ---- padding + allocation satellites ----
+
+
+def test_padded_graph_adds_isolated_vertices():
+    g = graphs.erdos_renyi(50, 0.1, seed=3)
+    g2 = g.padded(60)
+    assert g2.n == 60 and g2.num_edges == g.num_edges
+    np.testing.assert_array_equal(g2.degrees()[:50], g.degrees())
+    assert (g2.degrees()[50:] == 0).all()
+    assert g2.params["padded_from"] == 50
+    with pytest.raises(ValueError, match="pad"):
+        g.padded(49)
+    assert g.padded(50) is g
+
+
+def test_allocate_pads_awkward_n_end_to_end():
+    """Arbitrary real-graph n drops into the coded engine via padding."""
+    g = graphs.erdos_renyi(101, 0.1, seed=9)        # 101 divides nothing
+    g2, alloc = graphs.allocate(g, 4, 2)
+    assert alloc.n == divisible_n(101, 4, 2) == g2.n
+    prog = algo.pagerank()
+    ref = algo.reference_run(prog, g2, 3, path="sparse")
+    for mode in ("uncoded", "coded"):
+        res = engine.run(prog, g2, alloc, 3, mode=mode, path="sparse")
+        np.testing.assert_array_equal(res.state, ref)
+
+
+def test_er_allocation_pad_flag():
+    alloc = er_allocation(101, 4, 2, pad=True)
+    assert alloc.n == divisible_n(101, 4, 2)
+    with pytest.raises(ValueError, match="divisible"):
+        er_allocation(101, 4, 2)
+
+
+def test_random_allocation_vectorized_consistency():
+    alloc = random_allocation(60, 5, 3, seed=4)
+    assert (alloc.map_sets.sum(axis=0) == 3).all()   # r replicas per vertex
+    for v in range(0, 60, 7):
+        expect = alloc.subsets[alloc.batch_of[v]]
+        np.testing.assert_array_equal(np.flatnonzero(alloc.map_sets[:, v]),
+                                      expect)
+
+
+def test_batch_vertices_dict_lookup():
+    alloc = er_allocation(divisible_n(40, 4, 2), 4, 2)
+    for b, subset in enumerate(alloc.subsets):
+        np.testing.assert_array_equal(alloc.batch_vertices(subset),
+                                      np.flatnonzero(alloc.batch_of == b))
+    # Unsorted input resolves; unknown subsets raise like tuple.index did.
+    np.testing.assert_array_equal(alloc.batch_vertices((1, 0)),
+                                  alloc.batch_vertices((0, 1)))
+    with pytest.raises(ValueError, match="not a batch subset"):
+        alloc.batch_vertices((0, 99))
