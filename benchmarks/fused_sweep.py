@@ -1,0 +1,107 @@
+"""Fused (multi-device shard_map) vs NumPy sparse coded-Shuffle sweep.
+
+Measures the steady-state per-iteration wall-clock of one coded Shuffle on
+the sparse path, two ways off the *same* compiled plan:
+
+  * `FusedSparseShuffle` replaying its jitted shard_map exchange on a
+    K-device ('servers',) host mesh (per-shard xor_code encode, one packed
+    all_gather of uint32 words, per-shard strip/decode);
+  * `ShufflePlan.execute_coded_sparse`, the single-host NumPy executor.
+
+Bitwise parity of the delivered uint32 words is asserted on every case -
+this is a benchmark of the *same* computation on two substrates, not of
+two approximations.
+
+jax pins the process's device count at first init, so the sweep runs in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 (HOME
+and JAX_PLATFORMS=cpu passed through per the ROADMAP note). The smoke row
+`scale_fused_pagerank_n280` is committed to BENCH_scale.json and gated by
+benchmarks/check_regression.py. Interpreted host-CPU collectives are NOT
+the TPU performance story - the record tracks regression of the fused
+path's compiled replay, while the numpy column is the reference point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+SMOKE_CASES = [(280, 8, 3, 0.10)]          # n=280 (already divisible)
+FULL_CASES = [(1000, 8, 3, 0.05), (3000, 8, 3, 0.02)]
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core.allocation import divisible_n, er_allocation
+from repro.core.bitcodec import floats_to_words
+from repro.core.fused_shuffle import FusedSparseShuffle
+from repro.core.shuffle_plan import compile_plan_csr
+
+cases = json.loads(sys.argv[1])
+prog = algo.pagerank()
+rows = []
+for n_req, K, r, p in cases:
+    n = divisible_n(n_req, K, r)
+    g = graphs.erdos_renyi(n, p, seed=7)
+    alloc = er_allocation(n, K, r)
+    plan = compile_plan_csr(g.csr, alloc)
+    tables = plan.edge_tables(g.csr, alloc)
+    fx = FusedSparseShuffle(plan, g.csr, alloc)
+    ev = prog.map_edge_values(g, prog.init(g)).astype(np.float32)
+
+    ref = plan.execute_coded_sparse(ev, tables)
+    res = fx.execute(ev)                       # includes jit compile
+    equal = bool(np.array_equal(floats_to_words(ref.values),
+                                floats_to_words(res.values)))
+
+    iters = 5
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        plan.execute_coded_sparse(ev, tables)
+    t_numpy = (time.perf_counter() - t0) / iters
+
+    fx.execute(ev)                             # steady-state warmup
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fx.execute(ev)
+    t_fused = (time.perf_counter() - t0) / iters
+
+    rows.append({"n": n, "K": K, "r": r, "edges": int(g.num_edges),
+                 "M": int(plan.all_k.size), "equal": equal,
+                 "fused_us": t_fused * 1e6, "numpy_us": t_numpy * 1e6})
+print(json.dumps(rows))
+"""
+
+
+def run(report, smoke=False):
+    cases = SMOKE_CASES if smoke else SMOKE_CASES + FULL_CASES
+    # Absolute src path: run.py supports plain-script invocation from any
+    # cwd, so the subprocess env must not depend on the caller's cwd.
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, json.dumps(cases)],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": src, "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/tmp"), "JAX_PLATFORMS": "cpu"})
+    if proc.returncode != 0:
+        raise RuntimeError(f"fused sweep subprocess failed:\n"
+                           f"{proc.stderr[-2000:]}")
+    rows = json.loads(proc.stdout.strip().splitlines()[-1])
+    for row in rows:
+        assert row["equal"], f"fused != numpy words at n={row['n']}"
+        report(f"scale_fused_pagerank_n{row['n']}", row["fused_us"],
+               f"K={row['K']} r={row['r']} edges={row['edges']} "
+               f"M={row['M']} numpy_us={row['numpy_us']:.1f} "
+               f"vs_numpy={row['fused_us'] / max(row['numpy_us'], 1e-9):.1f}x "
+               f"bitwise_equal={row['equal']}")
+    return {"rows": rows}

@@ -26,10 +26,16 @@ Execution paths (`path=` argument):
       may differ by float reduction order within a few ulp; min/integer
       programs are bitwise identical (see algorithms.py).
 
-Reduce backends (sparse path): `backend="numpy"` segment-reduces with
-reduceat; `backend="spmv"` routes the row reduction of linear programs
-(pagerank, degree) through the kernels/spmv Pallas kernel in [bm, n] blocked
-strips, so the TPU path exercises real MXU tiles at O(bm*n) memory.
+Backends (sparse path): `backend="numpy"` segment-reduces with reduceat;
+`backend="spmv"` routes the row reduction of linear programs (pagerank,
+degree) through the kernels/spmv Pallas kernel in [bm, n] blocked strips, so
+the TPU path exercises real MXU tiles at O(bm*n) memory; `backend="fused"`
+(mode="coded" only) executes each iteration's Shuffle on a multi-device
+('servers',) mesh under shard_map - per-shard XOR encode, one packed
+all_gather of uint32 coded words, per-shard strip - via
+`fused_shuffle.FusedSparseShuffle`, jitted once and replayed, with delivered
+words bitwise equal to the NumPy plan executor (the Reduce then rides the
+same gather + segment reduction as backend="numpy").
 
 Modes:
   single      - oracle, no distribution.
@@ -184,13 +190,14 @@ def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
 
     `path` picks the execution form (see module docstring); "auto" resolves
     to sparse whenever the program supplies the edge-value form. `backend`
-    ("numpy" | "spmv") selects the sparse Reduce implementation;
+    ("numpy" | "spmv" | "fused") selects the sparse implementation;
     `backend_opts` is forwarded to it (spmv: `bm`, `interpret` - pass
-    ``{"interpret": False}`` on real TPU hardware).
+    ``{"interpret": False}`` on real TPU hardware; fused: `mesh`, `encode`,
+    `interpret` - see `fused_shuffle.FusedSparseShuffle`).
     """
     backend_opts = backend_opts or {}
     sparse = _use_sparse(program, mode, path)
-    if backend not in ("numpy", "spmv"):
+    if backend not in ("numpy", "spmv", "fused"):
         raise ValueError(f"unknown backend {backend!r}")
     if backend == "spmv":
         if not sparse:
@@ -199,6 +206,15 @@ def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
             raise ValueError(
                 f"{program.name} is not linear (no map_source/finalize); "
                 "backend='spmv' needs a per-source Map and a sum Reduce")
+    if backend == "fused":
+        if not sparse:
+            raise ValueError("backend='fused' requires the sparse path")
+        if mode != "coded":
+            raise ValueError(
+                "backend='fused' executes the coded multicast schedule; "
+                f"use mode='coded' (got {mode!r})")
+        if alloc is None:
+            raise ValueError("backend='fused' needs an allocation")
     state = program.init(g)
     total_bits = 0
     distributed = mode != "single" and alloc is not None
@@ -208,8 +224,14 @@ def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
         # dense compile, so CSR-native graphs never materialize [n, n].
         plan = compile_plan_csr(g.csr, alloc, schedule=mode != "uncoded")
     tables = None
+    fused = None
     if sparse and distributed and mode in PLAN_MODES:
         tables = plan.edge_tables(g.csr, alloc)
+    if backend == "fused":
+        # Partitioned + jitted once; every iteration replays the same
+        # compiled shard_map exchange (compile-once / execute-many).
+        from .fused_shuffle import FusedSparseShuffle
+        fused = FusedSparseShuffle(plan, g.csr, alloc, **backend_opts)
     for _ in range(iters):
         if sparse:
             if backend == "spmv":
@@ -226,7 +248,8 @@ def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
                 state = program.reduce_edges(edge_vals, g.csr.indptr,
                                              state, g)
                 continue
-            res = plan.execute_sparse(edge_vals, mode, tables)
+            res = (fused.execute(edge_vals) if fused is not None
+                   else plan.execute_sparse(edge_vals, mode, tables))
             total_bits += res.bits_sent
             state = _reduce_sparse(program, g, edge_vals, res,
                                    tables.gather, state)

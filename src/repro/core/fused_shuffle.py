@@ -1,4 +1,4 @@
-"""TPU-idiomatic fused coded Shuffle (DESIGN.md §3, 'fused' path).
+"""Multi-device coded Shuffle under shard_map (devices = servers).
 
 The literal scheme multicasts per (r+1)-group columns one at a time - fine on
 an Ethernet bus, wrong on an ICI torus. Here every server packs ALL its coded
@@ -10,40 +10,383 @@ aside); latency collapses from O(#groups * #columns) transmissions to one
 collective phase - this is the hardware adaptation of the paper's shared-bus
 assumption.
 
-The column/slot structure comes straight off the compiled `ShufflePlan`
-(compile-once), rather than re-enumerating (r+1)-subsets here; this file only
-lays the plan's columns out per sender for the dense all_gather.
+Two executors share that design:
 
-Runs under shard_map on a ('servers',) mesh; devices = servers.
+  * **Sparse (production path)** - `partition_plan` splits a compiled CSR
+    `ShufflePlan` per server: each device holds only its own slice of the
+    Map output (`loc_e`, the [nnz]-indexed values it Mapped, O(r nnz / K))
+    plus its encode/decode/strip tables (O(plan / K)). One iteration under
+    `shard_map` on a ('servers',) mesh is (a) per-shard gather-shift-mask +
+    XOR encode through the batched `kernels/xor_code` route, (b) one packed
+    dense all_gather of uint32 coded words, (c) per-shard strip + shift-back
+    into each receiver's delivery slice. No [n, n] or O(n^2)-shaped array
+    exists anywhere on this path; `FusedSparseShuffle` jits the exchange
+    once and replays it every iteration, bit-exact against
+    `ShufflePlan.execute_coded_sparse` (unicast leftovers ride the same
+    all_gather as single-slot full-width columns).
+
+  * **Dense (small-n validation reference)** - `fused_exchange` consumes a
+    replicated [n, n] value matrix through [n, n]-indexed schedule tensors;
+    kept only to cross-check the collective layout at validation scale.
+
+The column/slot structure comes straight off the compiled `ShufflePlan`
+(compile-once) via `compile_plan_csr` - `build_schedule` accepts a `Graph`
+and never touches `.adj`, so schedule construction works on CSR-native
+graphs beyond `dense_limit`.
+
+Word format: one uint32 per coded column and slot, in *codec bit order*
+(`bitcodec.floats_to_words`), so segment s of a value travels left-aligned
+as ``(word << shift_s) & mask_s`` - identical bit semantics to the NumPy
+plan executor, which is what makes the device path bitwise comparable.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..launch.mesh import shard_map_compat
+from ..kernels.xor_code import ops as xor_ops
+from ..launch.mesh import make_servers_mesh, shard_map_compat
 from .allocation import Allocation
-from .graph_models import Graph
-from .shuffle_plan import compile_plan
+from .bitcodec import floats_to_words, words_to_floats
+from .graph_models import CSR, Graph
+from .shuffle_plan import (PlanShuffleResult, ShufflePlan, _run_ranks,
+                           compile_plan_csr)
+
+FULL_MASK = np.uint32(0xFFFFFFFF)
 
 
-def build_schedule(adj: np.ndarray, alloc: Allocation):
-    """Static (graph-dependent, data-independent) coded schedule.
+def _sender_layout(plan: ShufflePlan) -> tuple[np.ndarray, np.ndarray]:
+    """Per-sender packing of the plan's coded columns.
 
-    Compiles the ShufflePlan once and lays its columns out per sender,
-    padded to a common buffer length so the all_gather is dense. Returns
-    numpy index tensors consumed by the jitted exchange.
+    Deterministic order within each sender: (group, in-group column rank).
+    Returns (colpos [C] - position of column c in its sender's buffer,
+    ncols [K] - coded-column count per sender).
+    """
+    order = np.lexsort((plan.col_rank, plan.col_gm, plan.col_sender))
+    _, rank = _run_ranks(plan.col_sender[order])
+    colpos = np.empty(plan.col_sender.size, dtype=np.int64)
+    colpos[order] = rank
+    ncols = np.bincount(plan.col_sender, minlength=plan.K)
+    return colpos, ncols
+
+
+# ---------------------------------------------------------------------------
+# Sparse multi-device path (production)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSparseSchedule:
+    """Per-server partition of a compiled CSR plan (all arrays plan-sized).
+
+    Device k's shard (row k of every array) is everything it needs for one
+    coded Shuffle: `loc_e` selects the [nnz] edge values it Mapped (column
+    vertex in M_k - O(r nnz / K) entries), the `enc_*` tables lay its coded
+    columns (+ its unicast leftovers, as single-slot full-width columns)
+    into a [W]-word buffer, and the `dec_*`/`strip_*` tables recover its
+    delivery slice from the all_gathered [K, W] buffer matrix.
+
+    Sentinels: local index `Lmax` is a guaranteed-zero word; buffer column
+    `W` is a guaranteed-zero column (padded after the all_gather); masks of
+    sentinel slots are 0, so they OR/XOR away - encode and decode are plain
+    gather-shift-mask pipelines with no control flow.
+    """
+
+    K: int
+    r: int
+    W: int                        # per-sender buffer width (words)
+    Lmax: int                     # max local-value count over servers
+    Dmax: int                     # max delivery count over receivers
+    loc_e: np.ndarray             # [K, Lmax] int64 CSR entry (nnz = zero pad)
+    enc_l: np.ndarray             # [K, W, r] int32 local index (Lmax = zero)
+    enc_shift: np.ndarray         # [K, W, r] uint32 segment left-shift
+    enc_mask: np.ndarray          # [K, W, r] uint32 segment keep-mask
+    dec_s: np.ndarray             # [K, Dmax, r] int32 sender of segment t
+    dec_w: np.ndarray             # [K, Dmax, r] int32 buffer column (W = zero)
+    dec_mask: np.ndarray          # [K, Dmax, r] uint32 own-slot keep-mask
+    dec_shift: np.ndarray         # [K, Dmax, r] uint32 shift back into place
+    strip_l: np.ndarray           # [K, Dmax, r, r-1] int32 local index
+    strip_shift: np.ndarray       # [K, Dmax, r, r-1] uint32
+    strip_mask: np.ndarray        # [K, Dmax, r, r-1] uint32
+
+
+def partition_plan(plan: ShufflePlan, csr: CSR,
+                   alloc: Allocation) -> FusedSparseSchedule:
+    """Partition a compiled CSR plan per server for the fused sparse path.
+
+    Pure compile-time layout (no data): every output array is [nnz]- or
+    [plan]-sized. Unicast leftovers are assigned to the smallest server
+    that Mapped their column vertex and appended to that sender's buffer as
+    single-slot full-width columns, so they ride the same all_gather.
+    """
+    plan._require_schedule()
+    tables = plan.edge_tables(csr, alloc)     # locates edges + validates
+    K, r = plan.K, plan.r
+    C = plan.col_sender.size
+    Pn = plan.pair_k.size
+    L = plan.left_k.size
+    nstrip = max(r - 1, 0)
+
+    colpos, ncols = _sender_layout(plan)
+
+    # Leftover layout: sender = smallest mapper of the column vertex,
+    # appended after that sender's coded columns (stable (k, i, j) order).
+    if L:
+        lsender = np.argmax(alloc.map_sets[:, plan.left_j], axis=0)
+        if not alloc.map_sets[lsender, plan.left_j].all():
+            raise RuntimeError("leftover value has no Mapping server")
+        lorder = np.argsort(lsender, kind="stable")
+        _, lrank = _run_ranks(lsender[lorder])
+        leftw = np.empty(L, dtype=np.int64)
+        leftw[lorder] = ncols[lsender[lorder]] + lrank
+        nleft = np.bincount(lsender, minlength=K)
+    else:
+        lsender = np.zeros(0, dtype=np.int64)
+        leftw = np.zeros(0, dtype=np.int64)
+        nleft = np.zeros(K, dtype=np.int64)
+    W = max(int((ncols + nleft).max()), 1)
+
+    # Per-server local Map slices: CSR entries whose column vertex the
+    # server Mapped (it can recompute exactly these values locally).
+    member = alloc.map_sets[:, csr.indices]             # [K, nnz] bool
+    counts = member.sum(axis=1)
+    Lmax = max(int(counts.max()), 1)
+    loc_e = np.full((K, Lmax), csr.nnz, dtype=np.int64)  # nnz = zero pad
+
+    # --- encode tables: valid plan slots + leftover slots, per sender ---
+    enc_l = np.full((K, W, r), Lmax, dtype=np.int32)     # Lmax = zero word
+    enc_shift = np.zeros((K, W, r), dtype=np.uint32)
+    enc_mask = np.zeros((K, W, r), dtype=np.uint32)
+    cs, sl = np.nonzero(plan.slot_pair < Pn) if C else (
+        np.zeros(0, np.int64), np.zeros(0, np.int64))
+    e_of_slot = tables.pair_e[plan.slot_pair[cs, sl]] if cs.size else cs
+    s_of_slot = plan.col_sender[cs] if cs.size else cs
+
+    # --- decode tables, first in flat (k, i, j) delivery order ---
+    M = plan.all_k.size
+    f_s = np.zeros((M, r), dtype=np.int32)
+    f_w = np.full((M, r), W, dtype=np.int32)             # W = zero column
+    f_mask = np.zeros((M, r), dtype=np.uint32)
+    f_shift = np.zeros((M, r), dtype=np.uint32)
+    f_sl = np.full((M, r, nstrip), Lmax, dtype=np.int32)
+    f_ssh = np.zeros((M, r, nstrip), dtype=np.uint32)
+    f_smk = np.zeros((M, r, nstrip), dtype=np.uint32)
+    if Pn:
+        mpos = plan.pos_covered
+        c, slot = plan.pair_col, plan.pair_slot          # [P, r]
+        f_s[mpos] = plan.col_sender[c]
+        f_w[mpos] = colpos[c]
+        f_mask[mpos] = plan.slot_mask[c, slot]
+        f_shift[mpos] = np.broadcast_to(plan.seg_shift[None, :], (Pn, r))
+        if nstrip:
+            ar = np.broadcast_to(np.arange(r)[None, None, :], (Pn, r, r))
+            others = ar[~(ar == slot[..., None])].reshape(Pn, r, nstrip)
+            c3 = np.broadcast_to(c[:, :, None], (Pn, r, nstrip))
+            sp = plan.slot_pair[c3, others]              # [P, r, r-1]
+            svalid = sp < Pn
+            f_ssh[mpos] = plan.slot_shift[c3, others]
+            f_smk[mpos] = plan.slot_mask[c3, others]
+            e_strip = tables.pair_e[np.minimum(sp, max(Pn - 1, 0))]
+    if L:
+        f_s[plan.pos_left, 0] = lsender
+        f_w[plan.pos_left, 0] = leftw
+        f_mask[plan.pos_left, 0] = FULL_MASK             # full word, shift 0
+
+    # --- per-server local index conversions (one vectorized pass each) ---
+    for k in range(K):
+        lset = np.flatnonzero(member[k])
+        loc_e[k, :lset.size] = lset
+        lpos = np.cumsum(member[k]) - 1                  # entry -> local idx
+        if cs.size:
+            m = s_of_slot == k                           # encode slots k sends
+            if not member[k][e_of_slot[m]].all():
+                raise RuntimeError(f"sender {k} schedules a value it "
+                                   "did not Map")
+            enc_l[k, colpos[cs[m]], sl[m]] = lpos[e_of_slot[m]]
+            enc_shift[k, colpos[cs[m]], sl[m]] = plan.slot_shift[cs[m], sl[m]]
+            enc_mask[k, colpos[cs[m]], sl[m]] = plan.slot_mask[cs[m], sl[m]]
+        if L:
+            m = lsender == k                             # leftovers k unicasts
+            if not member[k][tables.left_e[m]].all():
+                raise RuntimeError(f"sender {k} unicasts a value it "
+                                   "did not Map")
+            enc_l[k, leftw[m], 0] = lpos[tables.left_e[m]]
+            enc_mask[k, leftw[m], 0] = FULL_MASK         # full word, shift 0
+        if Pn and nstrip:
+            m = plan.pair_k == k                         # strips k recomputes
+            li = np.where(svalid[m], lpos[e_strip[m]], Lmax)
+            if not (member[k][e_strip[m]] | ~svalid[m]).all():
+                raise RuntimeError(f"receiver {k} must strip a value it "
+                                   "did not Map")
+            f_sl[plan.pos_covered[m]] = li.astype(np.int32)
+
+    # --- scatter the flat decode tables into per-receiver padded rows ---
+    dcount = np.diff(plan.ptr)
+    Dmax = max(int(dcount.max()) if K else 0, 1)
+    kk = plan.all_k
+    dd = np.arange(M, dtype=np.int64) - plan.ptr[kk]
+    dec_s = np.zeros((K, Dmax, r), dtype=np.int32)
+    dec_w = np.full((K, Dmax, r), W, dtype=np.int32)
+    dec_mask = np.zeros((K, Dmax, r), dtype=np.uint32)
+    dec_shift = np.zeros((K, Dmax, r), dtype=np.uint32)
+    strip_l = np.full((K, Dmax, r, nstrip), Lmax, dtype=np.int32)
+    strip_shift = np.zeros((K, Dmax, r, nstrip), dtype=np.uint32)
+    strip_mask = np.zeros((K, Dmax, r, nstrip), dtype=np.uint32)
+    dec_s[kk, dd] = f_s
+    dec_w[kk, dd] = f_w
+    dec_mask[kk, dd] = f_mask
+    dec_shift[kk, dd] = f_shift
+    strip_l[kk, dd] = f_sl
+    strip_shift[kk, dd] = f_ssh
+    strip_mask[kk, dd] = f_smk
+
+    return FusedSparseSchedule(
+        K=K, r=r, W=W, Lmax=Lmax, Dmax=Dmax, loc_e=loc_e,
+        enc_l=enc_l, enc_shift=enc_shift, enc_mask=enc_mask,
+        dec_s=dec_s, dec_w=dec_w, dec_mask=dec_mask, dec_shift=dec_shift,
+        strip_l=strip_l, strip_shift=strip_shift, strip_mask=strip_mask)
+
+
+ENCODE_BACKENDS = ("xor-ref", "xor-kernel", "jnp")
+
+
+class FusedSparseShuffle:
+    """Jit-once / replay-every-iteration multi-device coded Shuffle.
+
+    Wraps a compiled plan's per-server partition and the jitted shard_map
+    exchange. `execute` is a drop-in peer of
+    `ShufflePlan.execute_coded_sparse`: same [nnz] edge-value input, same
+    `PlanShuffleResult` (bitwise-equal uint32 words, same bit accounting).
+
+    encode:
+      "xor-ref"    - batched kernels/xor_code route, jnp oracle (default).
+      "xor-kernel" - same route through the Pallas kernel (interpret=True
+                     off-TPU; pass interpret=False on real hardware).
+      "jnp"        - plain jnp XOR reduce (no kernel route).
+    """
+
+    def __init__(self, plan: ShufflePlan, csr: CSR, alloc: Allocation,
+                 mesh: Mesh | None = None, *, encode: str = "xor-ref",
+                 interpret: bool = True):
+        if encode not in ENCODE_BACKENDS:
+            raise ValueError(f"unknown encode backend {encode!r}")
+        self.plan = plan
+        self.sched = partition_plan(plan, csr, alloc)
+        self.mesh = make_servers_mesh(plan.K) if mesh is None else mesh
+        if self.mesh.devices.size != plan.K:
+            raise ValueError(
+                f"mesh has {self.mesh.devices.size} devices but the plan "
+                f"has K={plan.K} servers (one device per server)")
+        self._fn = self._build(encode, interpret)
+        s = self.sched
+        self._dev_tables = tuple(jnp.asarray(a) for a in (
+            s.enc_l, s.enc_shift, s.enc_mask, s.dec_s, s.dec_w, s.dec_mask,
+            s.dec_shift, s.strip_l, s.strip_shift, s.strip_mask))
+
+    def _build(self, encode: str, interpret: bool):
+        use_kernel = encode == "xor-kernel"
+
+        def per_server(loc, enc_l, enc_shift, enc_mask, dec_s, dec_w,
+                       dec_mask, dec_shift, strip_l, strip_shift, strip_mask):
+            loc = loc[0]                                  # [Lmax+1] uint32
+            if encode == "jnp":
+                slotw = (loc[enc_l[0]] << enc_shift[0]) & enc_mask[0]
+                coded = jax.lax.reduce(slotw, jnp.uint32(0),
+                                       jax.lax.bitwise_xor, (1,))
+            else:
+                coded = xor_ops.xor_encode_slots(
+                    loc, enc_l[0], enc_shift[0], enc_mask[0],
+                    use_kernel=use_kernel, interpret=interpret)
+            allbufs = jax.lax.all_gather(coded, "servers")  # [K, W]
+            allbufs = jnp.pad(allbufs, ((0, 0), (0, 1)))    # zero col W
+            got = allbufs[dec_s[0], dec_w[0]]               # [Dmax, r]
+            sw = (loc[strip_l[0]] << strip_shift[0]) & strip_mask[0]
+            strip = jax.lax.reduce(sw, jnp.uint32(0),
+                                   jax.lax.bitwise_xor, (2,))
+            rec = ((got ^ strip) & dec_mask[0]) >> dec_shift[0]
+            words = jax.lax.reduce(rec, jnp.uint32(0),
+                                   jax.lax.bitwise_or, (1,))
+            return words[None]                              # [1, Dmax]
+
+        # pallas_call has no replication rule, so the kernel route must
+        # disable the output-replication checker (outputs are per-shard
+        # anyway - nothing is claimed replicated).
+        f = shard_map_compat(per_server, mesh=self.mesh,
+                             in_specs=(P("servers"),) * 11,
+                             out_specs=P("servers"), check=not use_kernel)
+        return jax.jit(f)
+
+    def exchange_words(self, edge_words: np.ndarray) -> np.ndarray:
+        """One coded Shuffle on codec-order uint32 words.
+
+        edge_words [nnz] -> recovered delivery words [M] in the plan's
+        (k, i, j) order, bitwise equal to what `execute_coded_sparse`
+        would deliver. The whole device computation is uint32 shift/mask/
+        XOR - no float ops - which is what makes equality exact.
+        """
+        s = self.sched
+        ew = np.append(np.ascontiguousarray(edge_words, np.uint32),
+                       np.uint32(0))
+        loc = np.zeros((s.K, s.Lmax + 1), dtype=np.uint32)
+        loc[:, :s.Lmax] = ew[s.loc_e]
+        out = np.asarray(self._fn(jnp.asarray(loc), *self._dev_tables))
+        plan = self.plan
+        M = plan.all_k.size
+        return out[plan.all_k, np.arange(M, dtype=np.int64)
+                   - plan.ptr[plan.all_k]]
+
+    def execute(self, edge_vals: np.ndarray) -> PlanShuffleResult:
+        """Drop-in peer of `ShufflePlan.execute_coded_sparse`."""
+        plan = self.plan
+        words = self.exchange_words(
+            floats_to_words(np.asarray(edge_vals, np.float32)))
+        bits = plan.coded_bits + plan.leftover_bits
+        return PlanShuffleResult(plan.all_k, plan.all_i, plan.all_j,
+                                 words_to_floats(words), plan.ptr, bits,
+                                 plan.n)
+
+
+def run_fused_sparse(g: Graph, edge_vals: np.ndarray, alloc: Allocation,
+                     mesh: Mesh | None = None, *, encode: str = "xor-ref",
+                     interpret: bool = True) -> PlanShuffleResult:
+    """Convenience one-shot: compile + partition + one sparse exchange."""
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    ex = FusedSparseShuffle(plan, g.csr, alloc, mesh, encode=encode,
+                            interpret=interpret)
+    return ex.execute(edge_vals)
+
+
+# ---------------------------------------------------------------------------
+# Dense small-n validation reference
+# ---------------------------------------------------------------------------
+
+
+def build_schedule(g: Graph, alloc: Allocation,
+                   plan: ShufflePlan | None = None):
+    """Static (graph-dependent, data-independent) dense-reference schedule.
+
+    Compiles the ShufflePlan once - adjacency-free via `compile_plan_csr`,
+    so a CSR-native graph beyond `dense_limit` never materializes [n, n] -
+    and lays its columns out per sender, padded to a common buffer length
+    so the all_gather is dense. Returns numpy index tensors consumed by the
+    jitted dense exchange (covered pairs only; leftovers are a sparse-path
+    concern - see `partition_plan`).
     """
     K, r = alloc.K, alloc.r
-    plan = compile_plan(adj, alloc, validate=False)
-    # Deterministic per-sender column order: (group, in-group column rank).
-    order = np.lexsort((plan.col_rank, plan.col_gm, plan.col_sender))
-    per_s: list[list[int]] = [[] for _ in range(K)]
-    for c in order:
-        per_s[int(plan.col_sender[c])].append(int(c))
-    width = max((len(p) for p in per_s), default=0)
+    if plan is None:
+        plan = compile_plan_csr(g.csr, alloc, validate=False)
+    # Per-sender column order comes from the one shared layout rule
+    # (`_sender_layout`), so the dense reference and the sparse partition
+    # can never disagree on buffer positions.
+    colpos, ncols = _sender_layout(plan)
+    per_s: list[list[int]] = [[0] * int(ncols[s]) for s in range(K)]
+    for c in range(plan.col_sender.size):
+        per_s[int(plan.col_sender[c])][int(colpos[c])] = c
+    width = int(ncols.max()) if ncols.size else 0
 
     P_pairs = plan.pair_k.size
     # Encode tensors: for slot t of server s, the XOR of values v[i,j] over
@@ -101,6 +444,7 @@ def fused_exchange(values: jnp.ndarray, enc_idx, dec_src, dec_tgt, dec_strip,
     values [n, n] float32 (replicated Map output; each server only reads its
     own columns through the schedule indices). Returns [n, n] recovered
     missing values (0 where not delivered) - identical on every server.
+    Validation reference only: the production path is `FusedSparseShuffle`.
     """
     words = _as_words(values)
 
@@ -138,6 +482,6 @@ def fused_exchange(values: jnp.ndarray, enc_idx, dec_src, dec_tgt, dec_strip,
 
 
 def run_fused(g: Graph, values: np.ndarray, alloc: Allocation, mesh: Mesh):
-    """Convenience wrapper: schedule + exchange; returns recovered matrix."""
-    sched = build_schedule(g.adj, alloc)
+    """Convenience wrapper: schedule + dense exchange; returns [n, n]."""
+    sched = build_schedule(g, alloc)
     return fused_exchange(jnp.asarray(values, jnp.float32), *sched, mesh=mesh)

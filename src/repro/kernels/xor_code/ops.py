@@ -69,6 +69,25 @@ def xor_strip_columns(slot_words, *, lanes: int = 128,
     return jnp.stack(cols, axis=1)
 
 
+def xor_encode_slots(loc: jnp.ndarray, idx: jnp.ndarray, shift: jnp.ndarray,
+                     mask: jnp.ndarray, *, lanes: int = 128,
+                     use_kernel: bool = True,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Per-shard fused-path encode: one server's packed coded buffer.
+
+    Gathers the server's slot words from its local value vector, aligns each
+    segment (left-shift + keep-mask, zero for sentinel slots), then XOR-folds
+    the r slots through the batched column route above - so the multi-device
+    shard_map path and the single-host ShufflePlan executor share one kernel.
+
+    loc [L+1] uint32 local words (last entry 0 = sentinel); idx [W, r] int
+    into loc; shift/mask [W, r] uint32 -> [W] uint32 coded columns.
+    """
+    slotw = (loc[idx] << shift) & mask
+    return xor_encode_columns(slotw, lanes=lanes, use_kernel=use_kernel,
+                              interpret=interpret)
+
+
 def floats_as_words(x: jnp.ndarray) -> jnp.ndarray:
     """Bit-preserving float32 -> uint32 view (lane codec for the fused path)."""
     return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)

@@ -38,6 +38,26 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = True):
                      check_rep=check)
 
 
+def make_servers_mesh(K: int):
+    """('servers',) mesh over the first K devices (devices = servers).
+
+    The coded-Shuffle fused path maps one Shuffle server per device.
+    `jax.make_mesh` wants the axis sizes to consume *all* devices, so this
+    builds the Mesh explicitly from a device prefix - a host with 8 forced
+    CPU devices can still run a K=4 plan.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < K:
+        raise ValueError(
+            f"need one device per server (K={K}) but only {len(devs)} "
+            f"devices exist; force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={K}")
+    return Mesh(np.asarray(devs[:K]), ("servers",))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

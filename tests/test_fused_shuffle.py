@@ -40,6 +40,34 @@ print(json.dumps({"ok": int(ok), "total": int(total)}))
 """
 
 
+def test_build_schedule_is_adjacency_free_beyond_dense_limit():
+    """Regression: `build_schedule` used to take a dense adjacency (and
+    `run_fused` read `g.adj`), which trips the dense-materialization guard
+    at scale. It now compiles via `compile_plan_csr` off the Graph, so
+    schedule construction works on a CSR-native graph at n > dense_limit -
+    and the guard proves the dense view never existed."""
+    import pytest
+
+    from repro import graphs
+    from repro.core import graph_models as gm
+    from repro.core.allocation import divisible_n, er_allocation
+    from repro.core.fused_shuffle import build_schedule
+
+    K, r = 8, 2
+    n = divisible_n(21000, K, r)
+    assert n > gm.DENSE_LIMIT
+    g = graphs.erdos_renyi(n, 4.0 / n, seed=3)
+    alloc = er_allocation(n, K, r)
+    enc_idx, dec_src, dec_tgt, dec_strip = build_schedule(g, alloc)
+    assert enc_idx.shape[0] == K and enc_idx.shape[2] == r
+    assert dec_src.shape[0] == dec_tgt.shape[0] == dec_strip.shape[0] == K
+    # Schedule tensors are plan-sized, not [n, n]-shaped.
+    for a in (enc_idx, dec_src, dec_tgt, dec_strip):
+        assert a.size < n * n // 8
+    with pytest.raises(ValueError, match="dense_limit"):
+        g.adj
+
+
 def test_fused_shuffle_bit_exact_on_6_devices():
     # HOME must survive (jax device init blocks without a resolvable home
     # dir), and the CPU platform must be pinned so jax does not probe for an

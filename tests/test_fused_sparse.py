@@ -1,0 +1,204 @@
+"""Sparse multi-device coded Shuffle parity (shard_map, 8 forced host devices).
+
+The fused sparse path (`fused_shuffle.FusedSparseShuffle`) must deliver
+*bitwise-identical* uint32 words to the NumPy plan executor
+(`ShufflePlan.execute_coded_sparse`) - across all four graph models x
+{pagerank, sssp}, all three encode routes (batched xor_code jnp oracle,
+Pallas kernel, plain jnp), the unicast-leftover spill, and the full
+`engine.run(path="sparse", backend="fused")` loop - while constructing no
+[n, n]-shaped array anywhere (schedule shape-guard + dense-materialization
+guard + tracemalloc enforced, including at n > dense_limit).
+
+Runs in subprocesses so the 8-device host-platform flag never leaks into
+other tests; HOME and JAX_PLATFORMS=cpu are passed through per the ROADMAP
+note (jax device probing hangs without them).
+"""
+import json
+import os
+import subprocess
+import sys
+
+PREAMBLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import tracemalloc
+import numpy as np
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core import engine, faults
+from repro.core import graph_models as gm
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation)
+from repro.core.bitcodec import floats_to_words
+from repro.core.fused_shuffle import FusedSparseShuffle
+from repro.core.shuffle_plan import compile_plan_csr
+
+out = {}
+
+
+def case(model):
+    # CSR-native graphs (repro.graphs streaming samplers) - the fused path
+    # never needs a dense view.
+    if model == "er":
+        n = divisible_n(48, 4, 2)
+        return graphs.erdos_renyi(n, 0.2, seed=11), er_allocation(n, 4, 2)
+    if model == "pl":
+        n = divisible_n(60, 4, 2)
+        return graphs.power_law(n, 2.5, seed=9), er_allocation(n, 4, 2)
+    if model == "rb":
+        return (graphs.random_bipartite(48, 24, 0.3, seed=5),
+                bipartite_allocation(48, 24, 6, 2))
+    if model == "sbm":
+        return (graphs.stochastic_block(48, 24, 0.25, 0.1, seed=5),
+                bipartite_allocation(48, 24, 6, 2))
+    raise ValueError(model)
+
+
+def parity(g, alloc, prog, iters=2, **kw):
+    # Two iterations replay the same jitted exchange on fresh values - the
+    # compile-once/execute-many contract, checked word-for-word per round.
+    plan = compile_plan_csr(g.csr, alloc)
+    tables = plan.edge_tables(g.csr, alloc)
+    fx = FusedSparseShuffle(plan, g.csr, alloc, **kw)
+    state = prog.init(g)
+    ok = True
+    for _ in range(iters):
+        ev = prog.map_edge_values(g, state).astype(np.float32)
+        ref = plan.execute_coded_sparse(ev, tables)
+        res = fx.execute(ev)
+        ok = ok and np.array_equal(floats_to_words(ref.values),
+                                   floats_to_words(res.values))
+        ok = ok and ref.bits_sent == res.bits_sent
+        buf = np.concatenate([ev, ref.values])
+        state = prog.reduce_edges(buf[tables.gather], g.csr.indptr, state, g)
+    return bool(ok)
+"""
+
+SCRIPT_PARITY = PREAMBLE + r"""
+for model in ("er", "rb", "sbm", "pl"):
+    g, alloc = case(model)
+    for prog in (algo.pagerank(), algo.sssp(0)):
+        out[f"{model}_{prog.name}"] = parity(g, alloc, prog)
+
+# Unicast-leftover spill (bipartite r > K2: cluster-2 batches uncovered).
+g, alloc = (graphs.random_bipartite(48, 24, 0.3, seed=5),
+            bipartite_allocation(48, 24, 6, 3))
+plan = compile_plan_csr(g.csr, alloc)
+out["spill_has_leftovers"] = bool(plan.left_k.size > 0)
+out["spill_pagerank"] = parity(g, alloc, algo.pagerank())
+out["spill_sssp"] = parity(g, alloc, algo.sssp(0))
+
+# Encode routes: Pallas kernel (interpret) and plain jnp vs the default.
+g, alloc = case("er")
+out["encode_xor_kernel"] = parity(g, alloc, algo.pagerank(), iters=1,
+                                  encode="xor-kernel")
+out["encode_jnp"] = parity(g, alloc, algo.pagerank(), iters=1, encode="jnp")
+
+# Mid-run failure recovery rides the same CSR plans on this 8-device host.
+g, alloc = case("er")
+res_f, stats = faults.run_with_failure(algo.pagerank(), g, alloc, 3,
+                                       failed=(1,), fail_at_iter=1)
+out["faults_bitwise"] = bool(np.array_equal(
+    res_f.state, algo.reference_run(algo.pagerank(), g, 3, path="sparse")))
+out["faults_recovery_bits"] = int(stats.recovery_bits)
+print(json.dumps(out))
+"""
+
+SCRIPT_ENGINE = PREAMBLE + r"""
+# --- acceptance: 10-iteration coded PageRank, fused == numpy, K = 8 ---
+K, r = 8, 3
+n = divisible_n(280, K, r)
+g0 = graphs.erdos_renyi(n, 0.15, seed=3)
+# dense_limit=1: ANY [n, n] materialization anywhere on the path raises.
+g = gm.Graph(model=g0.model, params=g0.params, csr=g0.csr, dense_limit=1)
+alloc = er_allocation(n, K, r)
+prog = algo.pagerank()
+plan = compile_plan_csr(g.csr, alloc)
+rn = engine.run(prog, g, alloc, 10, mode="coded", plan=plan, path="sparse")
+rf = engine.run(prog, g, alloc, 10, mode="coded", plan=plan, path="sparse",
+                backend="fused")
+out["engine_10it_bitwise"] = bool(np.array_equal(
+    floats_to_words(rn.state), floats_to_words(rf.state)))
+out["engine_bits_equal"] = bool(rn.shuffle_bits == rf.shuffle_bits)
+out["guard_held"] = True
+try:
+    g.adj
+    out["guard_held"] = False
+except ValueError:
+    pass
+
+# --- n > dense_limit: the path that used to be capped at toy n ---
+K, r = 8, 2
+n = divisible_n(21000, K, r)
+assert n > gm.DENSE_LIMIT
+g = graphs.erdos_renyi(n, 6.0 / n, seed=7)     # default guard active (n>2e4)
+alloc = er_allocation(n, K, r)
+tracemalloc.start()
+plan = compile_plan_csr(g.csr, alloc)
+tables = plan.edge_tables(g.csr, alloc)
+fx = FusedSparseShuffle(plan, g.csr, alloc)
+ev = prog.map_edge_values(g, prog.init(g)).astype(np.float32)
+ref = plan.execute_coded_sparse(ev, tables)
+res = fx.execute(ev)
+_, peak = tracemalloc.get_traced_memory()
+tracemalloc.stop()
+out["scale_words_bitwise"] = bool(np.array_equal(
+    floats_to_words(ref.values), floats_to_words(res.values)))
+nnz, M = g.csr.nnz, int(plan.all_k.size)
+out["scale_peak_mb"] = peak / 1e6
+out["scale_peak_o_edges"] = bool(peak < 1500 * nnz)   # O(nnz+plan), not O(n^2)
+out["scale_peak_below_dense"] = bool(peak < n * n)    # any [n,n] f32 would trip
+
+# Shape guard: every partitioned table is [nnz]/[plan]-sized and the
+# per-device rows are 1/K slices (+ padding slack) - nothing O(n^2)-shaped.
+s = fx.sched
+arrays = [s.loc_e, s.enc_l, s.enc_shift, s.enc_mask, s.dec_s, s.dec_w,
+          s.dec_mask, s.dec_shift, s.strip_l, s.strip_shift, s.strip_mask]
+out["tables_not_dense"] = bool(all(a.size < n * n // 8 for a in arrays))
+C = int(plan.col_sender.size) + int(plan.left_k.size)
+out["per_device_loc"] = bool(s.Lmax <= 2 * r * nnz // K + 8)
+out["per_device_cols"] = bool(s.W <= 2 * C // K + 8)
+out["per_device_deliveries"] = bool(s.Dmax <= 2 * M // K + 8)
+print(json.dumps(out))
+"""
+
+
+def _run(script, timeout=900):
+    # HOME must survive (jax device init blocks without a resolvable home
+    # dir), and the CPU platform must be pinned so jax does not probe for
+    # an accelerator the sandbox cannot initialize.
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=timeout,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": os.environ.get("HOME", "/tmp"),
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_fused_sparse_word_parity_models_programs_and_spill():
+    res = _run(SCRIPT_PARITY)
+    for model in ("er", "rb", "sbm", "pl"):
+        for prog in ("pagerank", "sssp"):
+            assert res[f"{model}_{prog}"], (model, prog)
+    assert res["spill_has_leftovers"]          # the case really spills
+    assert res["spill_pagerank"] and res["spill_sssp"]
+    assert res["encode_xor_kernel"] and res["encode_jnp"]
+    assert res["faults_bitwise"]
+    assert res["faults_recovery_bits"] > 0
+
+
+def test_fused_engine_acceptance_and_beyond_dense_limit():
+    res = _run(SCRIPT_ENGINE)
+    assert res["engine_10it_bitwise"]          # acceptance criterion
+    assert res["engine_bits_equal"]
+    assert res["guard_held"]                   # no [n, n] ever materialized
+    assert res["scale_words_bitwise"]          # n > dense_limit, bit-exact
+    assert res["scale_peak_o_edges"], res["scale_peak_mb"]
+    assert res["scale_peak_below_dense"]
+    assert res["tables_not_dense"]
+    assert res["per_device_loc"]
+    assert res["per_device_cols"]
+    assert res["per_device_deliveries"]

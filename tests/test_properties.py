@@ -8,15 +8,70 @@ pytest.importorskip(
 from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
+from test_schedule_invariants import (check_plan_csr_identity,
+                                      check_schedule_complete,
+                                      check_sparse_dense_delivery_equal,
+                                      check_word_conservation)
+
 from repro.core import algorithms as algo
 from repro.core import engine
 from repro.core import graph_models as gm
-from repro.core.allocation import divisible_n, er_allocation
+from repro.core.allocation import (divisible_n, er_allocation,
+                                   random_allocation)
 from repro.core.bitcodec import bits_to_floats, floats_to_bits, split_segments
 from repro.core.coded_shuffle import coded_load
 from repro.core.uncoded_shuffle import uncoded_load
 
 kr = st.tuples(st.integers(3, 6), st.integers(1, 4)).filter(lambda t: t[1] <= t[0])
+
+
+@st.composite
+def graph_allocs(draw):
+    """Random small (graph, allocation) pairs for the schedule invariants.
+
+    Covers all three allocation families (block ER, interleaved ER, random
+    placement - the last has no multicast structure by design, which is
+    exactly why the invariants must still hold on it) over ER and power-law
+    realizations, including r = 1 (no coding) and r = K (full replication).
+    """
+    K = draw(st.integers(3, 6))
+    r = draw(st.integers(1, min(K, 4)))
+    n = divisible_n(draw(st.integers(20, 70)), K, r)
+    seed = draw(st.integers(0, 10_000))
+    if draw(st.booleans()):
+        g = gm.erdos_renyi(n, draw(st.floats(0.05, 0.5)), seed=seed)
+    else:
+        g = gm.power_law(n, draw(st.floats(2.2, 3.0)), seed=seed)
+    kind = draw(st.sampled_from(["er", "er-interleave", "random"]))
+    if kind == "random":
+        alloc = random_allocation(n, K, r, seed=seed)
+    else:
+        alloc = er_allocation(n, K, r, interleave=kind == "er-interleave")
+    return g, alloc
+
+
+@given(graph_allocs())
+@settings(max_examples=25, deadline=None)
+def test_schedule_completeness_property(case):
+    check_schedule_complete(*case)
+
+
+@given(graph_allocs())
+@settings(max_examples=25, deadline=None)
+def test_xor_word_conservation_property(case):
+    check_word_conservation(*case)
+
+
+@given(graph_allocs())
+@settings(max_examples=25, deadline=None)
+def test_compile_plan_csr_bitwise_identity_property(case):
+    check_plan_csr_identity(*case)
+
+
+@given(graph_allocs())
+@settings(max_examples=25, deadline=None)
+def test_sparse_dense_delivery_equality_property(case):
+    check_sparse_dense_delivery_equal(*case)
 
 
 @given(kr, st.integers(0, 10_000))

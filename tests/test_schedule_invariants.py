@@ -1,0 +1,182 @@
+"""Schedule-invariant checks on the compiled ShufflePlan (tier-1).
+
+Four invariants lock the whole plan/schedule layer down; each is a plain
+check function over one (graph, allocation) pair so the hypothesis suite
+(`test_properties.py`) can drive the same bodies over random pairs while
+this module pins a deterministic seeded matrix that runs everywhere
+(hypothesis is an optional dependency):
+
+  * completeness - the plan's delivery set is exactly what each Reducer is
+    missing, re-derived through the *legacy dense* `missing_pairs` (an
+    independent code path from the compiler's edge pass);
+  * word conservation - bits-on-the-wire of an executed Shuffle equal the
+    plan's compile-time accounting, column widths re-derived from slot-mask
+    popcounts, leftovers 32 bits each - i.e. `coded_load` is exactly what
+    the wire carries, never recomputed from data;
+  * compile identity - `compile_plan` (dense adjacency) and
+    `compile_plan_csr` (adjacency-free) emit bitwise-identical plans;
+  * delivery equality - the sparse [nnz]-vector executors deliver the same
+    (k, i, j, value) arrays, bit for bit, as the dense [n, n] executors,
+    in every plan mode.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as algo
+from repro.core import graph_models as gm
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation, random_allocation)
+from repro.core.bitcodec import T_BITS
+from repro.core.shuffle_plan import compile_plan, compile_plan_csr
+from repro.core.uncoded_shuffle import missing_pairs
+
+PLAN_MODES = ("uncoded", "coded", "coded-fast")
+
+
+def _popcount32(a: np.ndarray) -> np.ndarray:
+    """Per-element popcount of a uint32 array (np.bitwise_count needs
+    numpy >= 2.0; pyproject allows 1.26, so count via unpackbits)."""
+    a = np.ascontiguousarray(a, dtype=np.uint32)
+    return np.unpackbits(a.view(np.uint8)).reshape(*a.shape, 32).sum(axis=-1)
+
+
+# ---- check bodies (shared with the hypothesis suite) ----
+
+
+def check_schedule_complete(g, alloc):
+    """Delivery set == per-Reducer missing set (legacy dense derivation),
+    and the covered/leftover split partitions it."""
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    for k in range(alloc.K):
+        need = missing_pairs(g.adj, alloc, k)            # independent path
+        a, b = int(plan.ptr[k]), int(plan.ptr[k + 1])
+        got = np.column_stack([plan.all_i[a:b], plan.all_j[a:b]])
+        assert got.shape == need.shape and (got == need).all(), f"server {k}"
+        assert (plan.all_k[a:b] == k).all()
+    pos = np.concatenate([plan.pos_covered, plan.pos_left])
+    assert np.array_equal(np.sort(pos), np.arange(plan.all_k.size))
+    return plan
+
+
+def check_word_conservation(g, alloc):
+    """Executed bits == compile-time accounting == slot-mask re-derivation.
+
+    The schedule fixes the wire volume: a coded column is as wide as its
+    widest occupied segment (popcount of the slot keep-masks), a leftover
+    is one full word, and what `execute_coded` reports must be exactly
+    that - for any values, so the check runs the executor on real Map
+    output and on a second, different value matrix.
+    """
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    widths = _popcount32(plan.slot_mask).max(axis=1)
+    assert np.array_equal(widths.astype(np.int64), plan.col_width)
+    assert plan.coded_bits == int(plan.col_width.sum())
+    assert plan.leftover_bits == plan.left_k.size * T_BITS
+    assert plan.uncoded_bits == plan.all_k.size * T_BITS
+    denom = plan.n * plan.n * T_BITS
+    assert plan.coded_load() * denom == pytest.approx(plan.coded_bits,
+                                                      rel=1e-12)
+    assert plan.uncoded_load() * denom == pytest.approx(plan.uncoded_bits,
+                                                        rel=1e-12)
+    prog = algo.pagerank()
+    values = np.asarray(prog.map_values(g, prog.init(g)), np.float32)
+    rng = np.random.default_rng(0)
+    for vals in (values, rng.normal(size=values.shape).astype(np.float32)):
+        res = plan.execute_coded(vals)
+        assert res.bits_sent == plan.coded_bits + plan.leftover_bits
+        assert plan.execute_uncoded(vals).bits_sent == plan.uncoded_bits
+    # (coded <= uncoded is a *statistical* property of the ER allocation,
+    # not a schedule invariant - unbalanced allocations can pad columns
+    # past the unicast cost; test_coded_load_never_exceeds_uncoded covers
+    # the allocation family the theorems speak about.)
+    return plan
+
+
+def check_plan_csr_identity(g, alloc):
+    """compile_plan(adj) and compile_plan_csr(csr): every array bitwise."""
+    pa = compile_plan(g.adj, alloc, validate=False)
+    pc = compile_plan_csr(g.csr, alloc, validate=False)
+    for f in dataclasses.fields(pa):
+        va, vb = getattr(pa, f.name), getattr(pc, f.name)
+        if isinstance(va, np.ndarray):
+            assert vb is not None and va.dtype == vb.dtype, f.name
+            np.testing.assert_array_equal(va, vb, err_msg=f.name)
+        else:
+            assert va == vb, f.name
+    return pc
+
+
+def check_sparse_dense_delivery_equal(g, alloc):
+    """Sparse [nnz] executors deliver bitwise what the dense ones do."""
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    tables = plan.edge_tables(g.csr, alloc)
+    prog = algo.sssp(0)   # exercises edge_weights (hardest bitwise contract)
+    values = np.asarray(prog.map_values(g, prog.init(g)), np.float32)
+    edge_vals = prog.map_edge_values(g, prog.init(g)).astype(np.float32)
+    # The two Map forms agree on scheduled entries (garbage elsewhere).
+    np.testing.assert_array_equal(values[g.csr.rows, g.csr.indices],
+                                  edge_vals)
+    for mode in PLAN_MODES:
+        rd = plan.execute(values, mode)
+        rs = plan.execute_sparse(edge_vals, mode, tables)
+        np.testing.assert_array_equal(
+            rd.values.view(np.uint32), rs.values.view(np.uint32),
+            err_msg=mode)
+        assert rd.bits_sent == rs.bits_sent
+        for arr in ("k", "i", "j", "ptr"):
+            np.testing.assert_array_equal(getattr(rd, arr), getattr(rs, arr))
+    return plan
+
+
+CHECKS = {
+    "complete": check_schedule_complete,
+    "words": check_word_conservation,
+    "csr-identity": check_plan_csr_identity,
+    "delivery": check_sparse_dense_delivery_equal,
+}
+
+
+# ---- deterministic seeded matrix (tier-1; hypothesis optional) ----
+
+
+def _cases():
+    cases = []
+    for seed in range(3):
+        K, r = 4, 2
+        n = divisible_n(40 + 10 * seed, K, r)
+        g = gm.erdos_renyi(n, 0.15 + 0.1 * seed, seed=seed)
+        cases.append((f"er{seed}", g, er_allocation(n, K, r)))
+    K, r = 5, 3
+    n = divisible_n(50, K, r)
+    cases.append(("er-interleave", gm.erdos_renyi(n, 0.2, seed=3),
+                  er_allocation(n, K, r, interleave=True)))
+    cases.append(("random-alloc", gm.erdos_renyi(divisible_n(40, 4, 2),
+                                                 0.2, seed=4),
+                  random_allocation(divisible_n(40, 4, 2), 4, 2, seed=4)))
+    cases.append(("pl", gm.power_law(divisible_n(48, 4, 2), 2.5, seed=5),
+                  er_allocation(divisible_n(48, 4, 2), 4, 2)))
+    cases.append(("rb-spill", gm.random_bipartite(48, 24, 0.3, seed=5),
+                  bipartite_allocation(48, 24, 6, 3)))   # real leftovers
+    cases.append(("r1", gm.erdos_renyi(divisible_n(40, 4, 1), 0.25, seed=6),
+                  er_allocation(divisible_n(40, 4, 1), 4, 1)))
+    return cases
+
+
+_CASES = _cases()
+
+
+@pytest.mark.parametrize("check", CHECKS, ids=list(CHECKS))
+@pytest.mark.parametrize("case", _CASES, ids=[c[0] for c in _CASES])
+def test_schedule_invariant(case, check):
+    _, g, alloc = case
+    CHECKS[check](g, alloc)
+
+
+def test_spill_case_really_has_leftovers():
+    """Guard the matrix itself: the rb-spill case must exercise the
+    unicast-leftover branch of every invariant."""
+    _, g, alloc = next(c for c in _CASES if c[0] == "rb-spill")
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    assert plan.left_k.size > 0 and plan.pair_k.size > 0

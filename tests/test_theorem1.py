@@ -1,0 +1,69 @@
+"""Theorem 1's inverse-linear trade-off as a tier-1 test (not a benchmark).
+
+The paper's headline result: the coded scheme's communication load is an
+r-fold improvement, L^C(r) -> L^UC / r (ER, Theorem 1; power-law, Theorem
+4 - same 1/r shape, slower convergence). Here the *empirical* ratio
+
+    gain(r) = (coded_bits(r) + leftover_bits(r)) * r / uncoded_bits(r)
+
+read off compiled plans of seeded realizations must sit within tolerance
+of 1 across an r-grid:
+
+  * lower side: gain(r) >= 1 exactly - a column is as wide as its widest
+    segment, so coded_bits >= 32 P / r and leftovers are never cheaper
+    than unicast; a value below 1 would beat the converse bound and means
+    the bit accounting is broken;
+  * upper side: the only overhead is column padding (max over <= r slot
+    widths), which concentrates as n grows - tolerances are calibrated
+    max-over-seeds at n = 600, K = 6 with ~2x headroom (measured: ER
+    <= 1.061, power-law <= 1.457 on this grid).
+
+Deterministic (seeded streaming samplers, schedule-only accounting - no
+data, no clocks), so this is a correctness gate, not a flaky perf check.
+"""
+import pytest
+
+from repro import graphs
+from repro.core.allocation import er_allocation
+from repro.core.shuffle_plan import compile_plan_csr
+
+K = 6
+N = 600                       # divisible by K and C(K, r) for r in 1..3
+R_GRID = (1, 2, 3)
+SEEDS = (0, 1)
+TOL = {"er": 0.10, "pl": 0.55}
+
+
+def _sample(model, seed):
+    if model == "er":
+        return graphs.erdos_renyi(N, 0.3, seed=seed)
+    return graphs.power_law(N, 2.5, seed=seed)
+
+
+@pytest.mark.parametrize("model", ["er", "pl"])
+def test_theorem1_inverse_linear_tradeoff(model):
+    for seed in SEEDS:
+        g = _sample(model, seed)
+        loads = {}
+        for r in R_GRID:
+            alloc = er_allocation(N, K, r)
+            plan = compile_plan_csr(g.csr, alloc, validate=False)
+            coded = plan.coded_bits + plan.leftover_bits
+            gain = coded * r / plan.uncoded_bits
+            assert gain >= 1.0 - 1e-12, \
+                f"{model} seed={seed} r={r}: gain {gain} beats the converse"
+            assert gain <= 1.0 + TOL[model], \
+                f"{model} seed={seed} r={r}: gain {gain} off Theorem 1"
+            loads[r] = plan.coded_load() + plan.leftover_bits / (
+                N * N * 32)
+        # The trade-off really is decreasing in r (the whole point).
+        assert loads[1] > loads[2] > loads[3]
+
+
+def test_theorem1_r1_is_exactly_uncoded():
+    """r = 1: no coding is possible, and the accounting must agree exactly
+    (every 'column' is one full 32-bit word of one missing value)."""
+    g = _sample("er", 0)
+    alloc = er_allocation(N, K, 1)
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    assert plan.coded_bits + plan.leftover_bits == plan.uncoded_bits
