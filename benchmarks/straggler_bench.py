@@ -1,22 +1,28 @@
 """Straggler tolerance: coded load degradation as senders straggle
-(the CDC-lineage property the r-fold Map redundancy buys; DESIGN.md SS5)."""
-from repro.core import graph_models as gm
+(the CDC-lineage property the r-fold Map redundancy buys; DESIGN.md SS5).
+
+Dense-free: one CSR plan compile feeds the base coded/uncoded loads
+(`empirical_loads`) AND the per-straggler-count degraded loads
+(`faults.straggler_coded_load_plan`), so the sweep runs at any n the
+sparse engine handles - no `g.adj` anywhere."""
+from repro import graphs
 from repro.core.allocation import divisible_n, er_allocation
-from repro.core.coded_shuffle import coded_load
-from repro.core.faults import straggler_coded_load
-from repro.core.uncoded_shuffle import uncoded_load
+from repro.core.faults import straggler_coded_load_plan
+from repro.core.loads import empirical_loads
+from repro.core.shuffle_plan import compile_plan_csr
 
 
 def run(report):
     K, r, p = 6, 3, 0.15
     n = divisible_n(240, K, r)
-    g = gm.erdos_renyi(n, p, seed=11)
+    g = graphs.erdos_renyi(n, p, seed=11)
     alloc = er_allocation(n, K, r)
-    base = coded_load(g.adj, alloc)
-    unc = uncoded_load(g.adj, alloc)
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    measured = empirical_loads(plan, alloc)
+    base, unc = measured["coded"], measured["uncoded"]
     report("straggler_0", 0.0, f"coded={base:.4f} uncoded={unc:.4f}")
     for s in range(1, r):
-        load = straggler_coded_load(g.adj, alloc, tuple(range(s)))
+        load = straggler_coded_load_plan(plan, tuple(range(s)))
         report(f"straggler_{s}", 0.0,
                f"load={load:.4f} overhead={load / base - 1:+.1%} "
                f"still<{'uncoded' if load < unc else 'UNCODED!'}")

@@ -1,0 +1,60 @@
+"""Table II experiment harness smoke/full driver (`repro.experiments`).
+
+Smoke (CI): the committed karate fixture through the full
+registry -> fetch -> ingest -> pad/allocate -> CSR-plan -> loads path, no
+network - the wall-clock is the CI-gated `scale_table2_karate_n34` record.
+
+Full: a >= 76k-vertex dataset. Uses cached soc-Epinions1 when present in
+the dataset cache ($REPRO_DATA_DIR), downloading only when the operator
+opted in via $REPRO_DOWNLOAD=1; otherwise the deterministic `er-76k`
+synthetic stand-in (sampled/cached offline). For the ER stand-in the
+measured gains are asserted against the Theorem-1 closed forms - the
+acceptance contract of the Table II reproduction.
+"""
+import time
+import tracemalloc
+
+from repro.experiments import DatasetUnavailable, run_table2
+
+
+def _full_dataset() -> str:
+    try:
+        from repro.experiments import fetch
+        fetch("soc-Epinions1")          # cached, or $REPRO_DOWNLOAD=1
+        return "soc-Epinions1"
+    except DatasetUnavailable:
+        return "er-76k"
+
+
+def run(report, smoke=False):
+    if smoke:
+        t0 = time.perf_counter()
+        result = run_table2(("karate",), K=4, r_grid=(1, 2), report=report)
+        dt = time.perf_counter() - t0
+        row = result["rows"][-1]
+        report(f"scale_table2_karate_n{row['n']}", dt * 1e6,
+               f"offline registry->harness path, gain_r2={row['gain']:.2f}")
+        return result
+
+    name = _full_dataset()
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    result = run_table2((name,), K=6, r_grid=(1, 2, 3),
+                        download=None,        # registry defers to the env
+                        report=report)
+    dt = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    for row in result["rows"]:
+        edges = row["edges"] * 2                      # directed CSR entries
+        assert peak < 600 * edges, \
+            f"table2 peak {peak / 1e6:.0f}MB is not O(edges)"
+        if name == "er-76k":                          # ER closed-form gate
+            assert row["coded"] <= row["coded_er_finite"] * 1.02, row
+            assert row["coded"] >= row["lower_bound_er"] * 0.97, row
+            assert 0.85 <= row["gain"] / row["r"] <= 1.02, row
+    report(f"table2_{name}_total", dt * 1e6,
+           f"n={result['rows'][0]['n']} edges={result['rows'][0]['edges']} "
+           f"peak_mb={peak / 1e6:.0f} "
+           f"gains={[round(r['gain'], 2) for r in result['rows']]}")
+    return result

@@ -1,14 +1,16 @@
 """Theorems 1-4: the inverse-linear computation<->communication trade-off on
 all four random graph models (measured coded gain vs r).
 
-Loads are read off one compiled ShufflePlan per realization
-(`loads.empirical_loads`) instead of separate subset-enumeration and
-per-server scans."""
+Graphs come from the streaming `repro.graphs` samplers and loads are read
+off one CSR-compiled ShufflePlan per realization
+(`loads.empirical_loads(g, alloc)`) instead of separate subset-enumeration
+and per-server scans - no `.adj` anywhere, so the sweep scales past
+`dense_limit` by just raising `base`."""
 import time
 
 import numpy as np
 
-from repro.core import graph_models as gm
+from repro import graphs
 from repro.core.allocation import (bipartite_allocation, divisible_n,
                                    er_allocation)
 from repro.core.loads import empirical_loads
@@ -16,13 +18,13 @@ from repro.core.loads import empirical_loads
 SAMPLES = 3
 
 
-def _measure(report, tag, graphs, alloc):
+def _measure(report, tag, gs, alloc):
     lu, lc, t0 = [], [], time.perf_counter()
-    for g in graphs:
-        measured = empirical_loads(g.adj, alloc)
+    for g in gs:
+        measured = empirical_loads(g, alloc)
         lu.append(measured["uncoded"])
         lc.append(measured["coded"])
-    us = (time.perf_counter() - t0) / len(graphs) * 1e6
+    us = (time.perf_counter() - t0) / len(gs) * 1e6
     gain = np.mean(lu) / np.mean(lc) if np.mean(lc) else float("nan")
     report(tag, us, f"uncoded={np.mean(lu):.4f} coded={np.mean(lc):.4f} "
            f"gain={gain:.2f}")
@@ -37,21 +39,22 @@ def run(report, smoke=False):
         # ER (Theorem 1)
         n = divisible_n(base, K, r)
         alloc = er_allocation(n, K, r)
-        gs = [gm.erdos_renyi(n, 0.15, seed=s) for s in range(samples)]
+        gs = [graphs.erdos_renyi(n, 0.15, seed=s) for s in range(samples)]
         out[f"er_r{r}"] = _measure(report, f"thm1_er_r{r}", gs, alloc)
         # RB (Theorem 2) - balanced clusters, Appendix-A allocation.
         n1 = n2 = divisible_n(base // 2, K // 2, min(r, K // 2))
         ab = bipartite_allocation(n1, n2, K, r)
-        gs = [gm.random_bipartite(n1, n2, 0.2, seed=s) for s in range(samples)]
+        gs = [graphs.random_bipartite(n1, n2, 0.2, seed=s)
+              for s in range(samples)]
         out[f"rb_r{r}"] = _measure(report, f"thm2_rb_r{r}", gs, ab)
         # SBM (Theorem 3) - union ER allocation (interleaved batches).
         nn = divisible_n(base, K, r)
         sa = er_allocation(nn, K, r, interleave=True)
-        gs = [gm.stochastic_block(nn // 2, nn // 2, 0.25, 0.08, seed=s)
+        gs = [graphs.stochastic_block(nn // 2, nn // 2, 0.25, 0.08, seed=s)
               for s in range(samples)]
         out[f"sbm_r{r}"] = _measure(report, f"thm3_sbm_r{r}", gs, sa)
         # PL (Theorem 4) - gamma > 2.
         ga = er_allocation(nn, K, r, interleave=True)
-        gs = [gm.power_law(nn, 2.5, seed=s) for s in range(samples)]
+        gs = [graphs.power_law(nn, 2.5, seed=s) for s in range(samples)]
         out[f"pl_r{r}"] = _measure(report, f"thm4_pl_r{r}", gs, ga)
     return out

@@ -101,7 +101,7 @@ def run_with_failure(program: VertexProgram, g: Graph, alloc: Allocation,
     return result, dataclasses.replace(stats, recovery_bits=recovery_bits)
 
 
-def straggler_coded_load(adj: np.ndarray, alloc: Allocation,
+def straggler_coded_load(graph, alloc: Allocation,
                          stragglers: tuple[int, ...]) -> float:
     """Normalized coded load when `stragglers` send nothing.
 
@@ -112,40 +112,105 @@ def straggler_coded_load(adj: np.ndarray, alloc: Allocation,
         receivers strip one fewer row),
       * s'-s own segments that s owed it are unicast by a third healthy
         member (they all Mapped B_{S\\{s'}}) - that unicast is the overhead.
+
+    `graph` is a `Graph`, a raw `CSR` view, or an already-compiled scheduled
+    `ShufflePlan` - those route through `straggler_coded_load_plan`, O(plan)
+    after one O(edges) CSR compile, so straggler accounting works past
+    `dense_limit`. A dense [n, n] adjacency still runs the legacy
+    subset-enumeration reference below (exactly equal by construction: the
+    plan path only replaces the per-group |Z^k| counts).
     """
     import itertools
 
     from .bitcodec import T_BITS, segment_bounds
     from .coded_shuffle import group_need
+    from .graph_models import CSR, Graph
+    from .shuffle_plan import ShufflePlan, compile_plan_csr
 
+    if isinstance(graph, ShufflePlan):
+        graph.check_alloc(alloc)
+        return straggler_coded_load_plan(graph, stragglers)
+    if isinstance(graph, (Graph, CSR)):
+        csr = graph.csr if isinstance(graph, Graph) else graph
+        return straggler_coded_load_plan(
+            compile_plan_csr(csr, alloc, validate=False), stragglers)
+    adj = graph
     K, r = alloc.K, alloc.r
     bounds = segment_bounds(r)
     total_bits = 0
     for S in itertools.combinations(range(K), r + 1):
         sizes = {k: len(group_need(adj, alloc, S, k)) for k in S}
-        healthy = [x for x in S if x not in stragglers]
-        if len(healthy) < 2:
-            raise ValueError(f"group {S} lacks healthy senders")
-        for s in S:
-            rows = []
-            for k in S:
-                if k == s:
-                    continue
-                others = tuple(sorted(set(S) - {k}))
-                a, b = bounds[others.index(s)]
-                rows.append((k, sizes[k], b - a))
-            ncols = max((sz for _, sz, _ in rows), default=0)
-            bits = sum(max((w for _, sz, w in rows if c < sz), default=0)
-                       for c in range(ncols))
-            total_bits += bits
-            if s in stragglers:
-                stand_in = next(x for x in healthy if x != s)
-                # Overhead: unicast of the stand-in's own segments from row
-                # s' of s's table (it cannot XOR what it does not have).
-                others = tuple(sorted(set(S) - {stand_in}))
-                a, b = bounds[others.index(s)]
-                total_bits += sizes[stand_in] * (b - a)
+        total_bits += _group_straggler_bits(S, sizes, stragglers, r, bounds)
     return total_bits / (alloc.n * alloc.n * T_BITS)
+
+
+def _group_straggler_bits(S: tuple[int, ...], sizes: dict[int, int],
+                          stragglers: tuple[int, ...], r: int,
+                          bounds) -> int:
+    """Bits one (r+1)-group sends under stragglers; see
+    `straggler_coded_load` for the hand-over accounting."""
+    healthy = [x for x in S if x not in stragglers]
+    if len(healthy) < 2:
+        raise ValueError(f"group {S} lacks healthy senders")
+    bits = 0
+    for s in S:
+        rows = []
+        for k in S:
+            if k == s:
+                continue
+            others = tuple(sorted(set(S) - {k}))
+            a, b = bounds[others.index(s)]
+            rows.append((k, sizes[k], b - a))
+        ncols = max((sz for _, sz, _ in rows), default=0)
+        bits += sum(max((w for _, sz, w in rows if c < sz), default=0)
+                    for c in range(ncols))
+        if s in stragglers:
+            stand_in = next(x for x in healthy if x != s)
+            # Overhead: unicast of the stand-in's own segments from row
+            # s' of s's table (it cannot XOR what it does not have).
+            others = tuple(sorted(set(S) - {stand_in}))
+            a, b = bounds[others.index(s)]
+            bits += sizes[stand_in] * (b - a)
+    return bits
+
+
+def straggler_coded_load_plan(plan, stragglers: tuple[int, ...]) -> float:
+    """`straggler_coded_load` read off a compiled scheduled `ShufflePlan`.
+
+    The dense reference only consumes the per-(group, receiver) needed-value
+    counts |Z^k_{S\\{k}}|; those are run lengths of the plan's covered-pair
+    table (each pair's group is the bitmask of its segment-0 column), so the
+    whole accounting is one O(P) pass plus the same C(K, r+1) group loop -
+    no adjacency, hence no dense_limit ceiling. Exactly equal to the dense
+    reference on the same realization.
+    """
+    import itertools
+
+    from .bitcodec import T_BITS, segment_bounds
+    from .shuffle_plan import ShufflePlan
+
+    assert isinstance(plan, ShufflePlan)
+    plan._require_schedule()
+    K, r = plan.K, plan.r
+    sizes: dict[tuple[int, int], int] = {}
+    if plan.pair_k.size:
+        gm = plan.col_gm[plan.pair_col[:, 0]]
+        order = np.lexsort((plan.pair_k, gm))
+        g_s, k_s = gm[order], plan.pair_k[order]
+        new = np.ones(g_s.size, dtype=bool)
+        new[1:] = (g_s[1:] != g_s[:-1]) | (k_s[1:] != k_s[:-1])
+        starts = np.flatnonzero(new)
+        counts = np.diff(np.append(starts, g_s.size))
+        for gmv, kv, c in zip(g_s[starts], k_s[starts], counts):
+            sizes[(int(gmv), int(kv))] = int(c)
+    bounds = segment_bounds(r)
+    total_bits = 0
+    for S in itertools.combinations(range(K), r + 1):
+        mask = sum(1 << x for x in S)
+        group_sizes = {k: sizes.get((mask, k), 0) for k in S}
+        total_bits += _group_straggler_bits(S, group_sizes, stragglers, r,
+                                            bounds)
+    return total_bits / (plan.n * plan.n * T_BITS)
 
 
 def rebalance(alloc: Allocation, K_new: int) -> Allocation:

@@ -7,21 +7,43 @@ compiled ShufflePlan; the benchmarks overlay the closed forms on these.
 from __future__ import annotations
 
 import math
+import warnings
 
 import numpy as np
 
 
-def empirical_loads(adj: np.ndarray, alloc) -> dict[str, float]:
+def empirical_loads(graph, alloc) -> dict[str, float]:
     """Exact uncoded/coded Definition-2 loads of one realization.
+
+    `graph` is a `Graph`, a raw `CSR` view, or an already-compiled
+    `ShufflePlan` - all three stay O(edges) end to end (the plan compiles
+    via `compile_plan_csr`), so measuring loads works at any n the sparse
+    engine runs at. A dense [n, n] adjacency is still accepted for the
+    legacy validation path, with a DeprecationWarning: it cannot exist past
+    `dense_limit`, and the CSR route is bitwise-equal below it
+    (`compile_plan_csr` is schedule-identical to `compile_plan`).
 
     Both numbers come from a single plan compile (the schedule fixes the bit
     volume; no data moves), replacing the separate subset-enumeration and
     per-server scans the benchmarks used to run.
     """
     from .bitcodec import T_BITS
-    from .shuffle_plan import compile_plan
+    from .graph_models import CSR, Graph
+    from .shuffle_plan import ShufflePlan, compile_plan, compile_plan_csr
 
-    plan = compile_plan(adj, alloc, validate=False)
+    if isinstance(graph, ShufflePlan):
+        plan = graph
+        plan.check_alloc(alloc)
+    elif isinstance(graph, Graph):
+        plan = compile_plan_csr(graph.csr, alloc, validate=False)
+    elif isinstance(graph, CSR):
+        plan = compile_plan_csr(graph, alloc, validate=False)
+    else:
+        warnings.warn(
+            "empirical_loads(adj, alloc) with a dense adjacency is "
+            "deprecated: pass the Graph (or its .csr) so the load "
+            "measurement stays O(edges)", DeprecationWarning, stacklevel=2)
+        plan = compile_plan(np.asarray(graph), alloc, validate=False)
     return {
         "uncoded": plan.uncoded_load(),
         "coded": plan.coded_load(),

@@ -168,6 +168,17 @@ class ShufflePlan:
         """False for missing-set-only plans (compile_plan(schedule=False))."""
         return self.col_width is not None
 
+    def check_alloc(self, alloc: Allocation) -> None:
+        """Raise unless this plan was compiled for `alloc`'s (n, K, r) -
+        the guard for entry points that accept a pre-compiled plan, so a
+        stale plan reused across an r-sweep errors instead of silently
+        reporting the wrong allocation's loads."""
+        if (self.n, self.K, self.r) != (alloc.n, alloc.K, alloc.r):
+            raise ValueError(
+                f"plan was compiled for (n={self.n}, K={self.K}, "
+                f"r={self.r}), allocation expects (n={alloc.n}, "
+                f"K={alloc.K}, r={alloc.r})")
+
     def _require_schedule(self) -> None:
         if not self.has_schedule:
             raise ValueError(

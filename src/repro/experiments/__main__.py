@@ -1,0 +1,4 @@
+"""``python -m repro.experiments`` == the Table II harness CLI."""
+from .table2 import main
+
+raise SystemExit(main())

@@ -93,3 +93,43 @@ def test_straggler_load_degrades_gracefully():
         assert base <= load < unc          # graceful, still beats uncoded
         assert load >= prev
         prev = load
+
+
+def test_straggler_load_plan_matches_dense_reference():
+    """The CSR/plan entry point (PR 5) reproduces the dense subset-
+    enumeration reference exactly: same sizes, same hand-over accounting."""
+    from repro import graphs
+    from repro.core.shuffle_plan import compile_plan_csr
+
+    for K, r in [(6, 3), (5, 2)]:
+        n = divisible_n(120, K, r)
+        g = graphs.erdos_renyi(n, 0.15, seed=11)
+        alloc = er_allocation(n, K, r)
+        plan = compile_plan_csr(g.csr, alloc, validate=False)
+        for s in range(1, r):
+            strag = tuple(range(s))
+            want = faults.straggler_coded_load(g.adj, alloc, strag)  # dense
+            assert faults.straggler_coded_load(g, alloc, strag) == want
+            assert faults.straggler_coded_load(g.csr, alloc, strag) == want
+            assert faults.straggler_coded_load(plan, alloc, strag) == want
+            assert faults.straggler_coded_load_plan(plan, strag) == want
+
+
+def test_straggler_plan_rejects_unhealthy_groups_and_no_schedule():
+    from repro import graphs
+    from repro.core.shuffle_plan import compile_plan_csr
+
+    K, r = 6, 3
+    n = divisible_n(120, K, r)
+    g = graphs.erdos_renyi(n, 0.15, seed=11)
+    alloc = er_allocation(n, K, r)
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    with pytest.raises(ValueError, match="lacks healthy senders"):
+        faults.straggler_coded_load_plan(plan, (0, 1, 2))
+    bare = compile_plan_csr(g.csr, alloc, validate=False, schedule=False)
+    with pytest.raises(ValueError, match="schedule=False"):
+        faults.straggler_coded_load_plan(bare, (0,))
+    # Mismatched (plan, alloc) pairs are an error, not a silent wrong load.
+    other = er_allocation(2 * n, K, r)
+    with pytest.raises(ValueError, match="compiled for"):
+        faults.straggler_coded_load(plan, other, (0,))

@@ -175,6 +175,118 @@ def test_degenerate_edge_lists():
         graphs.load_graph(["# only comments", "5 5"], largest_cc=True)
 
 
+# ---- streaming vectorized edge-list parser (PR 5) ----
+
+
+def _parse_both(tmp_path, raw: bytes, **kw):
+    """(fast-path-from-file, reference-from-lines) for byte-parity checks."""
+    from repro.graphs import io as gio
+    p = tmp_path / "t.edges"
+    p.write_bytes(raw)
+    got = graphs.read_edge_list(p, **kw)
+    want = gio._parse_lines(raw.decode().splitlines(), ("#", "%"), 0)
+    return got, want
+
+
+def test_read_edge_list_separator_and_noise_zoo(tmp_path):
+    raw = (b"# comment 12 34\n% other style\n1 2\n3,4\r\n5\t6\t0.25\n"
+           b" 7 8 garbage trailing\n\n   \n9 10 1423931633\n")
+    (u, v), (uw, vw) = _parse_both(tmp_path, raw)
+    np.testing.assert_array_equal(u, [1, 3, 5, 7, 9])
+    np.testing.assert_array_equal(v, [2, 4, 6, 8, 10])
+    np.testing.assert_array_equal(u, uw)
+    np.testing.assert_array_equal(v, vw)
+
+
+def test_read_edge_list_karate_byte_parity_across_chunks(tmp_path):
+    """Path fast path == line-by-line reference on the committed fixture,
+    for chunk sizes that split lines, tokens, and comments everywhere."""
+    from repro.graphs import io as gio
+    with open(graphs.fixture_path()) as f:
+        uw, vw = gio._parse_lines(list(f), ("#", "%"), 0)
+    for chunk_bytes in (1, 3, 7, 64, 1 << 22):
+        u, v = graphs.read_edge_list(graphs.fixture_path(),
+                                     chunk_bytes=chunk_bytes)
+        np.testing.assert_array_equal(u, uw)
+        np.testing.assert_array_equal(v, vw)
+
+
+def test_read_edge_list_empty_variants(tmp_path):
+    for raw in (b"", b"\n\n", b"# only\n% comments\n", b"   \n\t\n"):
+        (u, v), (uw, vw) = _parse_both(tmp_path, raw)
+        assert u.size == 0 and v.size == 0 and uw.size == 0
+        assert u.dtype == np.int64
+
+
+def test_read_edge_list_no_trailing_newline(tmp_path):
+    (u, v), _ = _parse_both(tmp_path, b"1 2\n3 4")
+    np.testing.assert_array_equal(u, [1, 3])
+    np.testing.assert_array_equal(v, [2, 4])
+
+
+def test_read_edge_list_fallback_matches_reference(tmp_path):
+    """Blocks the vectorized pass cannot certify re-parse through the
+    reference: negative labels parse, malformed fields raise identically."""
+    (u, v), (uw, vw) = _parse_both(tmp_path, b"-1 2\n3 4\n")
+    np.testing.assert_array_equal(u, [-1, 3])
+    np.testing.assert_array_equal(u, uw)
+    np.testing.assert_array_equal(v, vw)
+    for raw, match in [(b"1 2\n7\n", "line 2: need at least two fields"),
+                       (b"1.5 2\n", "invalid literal"),
+                       (b"x 1 2\n", "invalid literal"),
+                       (b",,,\n", "line 1: need at least two fields")]:
+        with pytest.raises(ValueError, match=match):
+            _parse_both(tmp_path, raw)
+
+
+def test_read_edge_list_bare_cr_line_endings(tmp_path):
+    """Universal-newline parity: bare '\\r' terminates a line (classic-Mac
+    files), it must not collapse records into one line's ignored tail."""
+    (u, v), (uw, vw) = _parse_both(tmp_path, b"1 2\r3 4\n")
+    np.testing.assert_array_equal(u, [1, 3])
+    np.testing.assert_array_equal(v, [2, 4])
+    np.testing.assert_array_equal(u, uw)
+    np.testing.assert_array_equal(v, vw)
+    # Wholly CR-terminated file (no '\n' at all), small chunks included.
+    raw = b"# cr file\r1 2\r3 4\r5 6\r"
+    p = tmp_path / "cr.edges"
+    p.write_bytes(raw)
+    for chunk_bytes in (4, 1 << 22):
+        u, v = graphs.read_edge_list(p, chunk_bytes=chunk_bytes)
+        np.testing.assert_array_equal(u, [1, 3, 5])
+        np.testing.assert_array_equal(v, [2, 4, 6])
+    # CRLF stays on the vectorized path and agrees too.
+    (u, v), _ = _parse_both(tmp_path, b"1 2\r\n3 4\r\n")
+    np.testing.assert_array_equal(u, [1, 3])
+
+
+def test_read_edge_list_linenos_are_global_across_chunks(tmp_path):
+    raw = b"1 2\n" * 100 + b"7\n"
+    p = tmp_path / "t.edges"
+    p.write_bytes(raw)
+    with pytest.raises(ValueError, match="line 101"):
+        graphs.read_edge_list(p, chunk_bytes=16)
+    # Bare-CR terminators count as lines too, at any chunk size.
+    p.write_bytes(b"1 2\r3 4\n7\n")
+    for chunk_bytes in (8, 1 << 22):
+        with pytest.raises(ValueError, match="line 3"):
+            graphs.read_edge_list(p, chunk_bytes=chunk_bytes)
+
+
+def test_read_edge_list_large_synthetic_parity(tmp_path):
+    """SNAP-shaped file (~20k lines, tab-separated, comment header):
+    vectorized fast path is byte-identical to the reference parser."""
+    rng = np.random.default_rng(5)
+    e = rng.integers(0, 10_000, size=(20_000, 2))
+    body = b"".join(b"%d\t%d\n" % (a, b) for a, b in e)
+    raw = b"# Directed graph (each unordered pair once)\n" + body
+    (u, v), (uw, vw) = _parse_both(tmp_path, raw, chunk_bytes=1 << 14)
+    np.testing.assert_array_equal(u, uw)
+    np.testing.assert_array_equal(v, vw)
+    np.testing.assert_array_equal(u, e[:, 0])
+    np.testing.assert_array_equal(v, e[:, 1])
+
+
 # ---- CSR-primary Graph ----
 
 

@@ -4,11 +4,13 @@ import math
 import numpy as np
 import pytest
 
+from repro import graphs
 from repro.core import graph_models as gm
 from repro.core import loads
 from repro.core.allocation import (bipartite_allocation, divisible_n,
                                    er_allocation)
 from repro.core.coded_shuffle import coded_load
+from repro.core.shuffle_plan import compile_plan_csr
 from repro.core.uncoded_shuffle import uncoded_load
 
 
@@ -97,6 +99,51 @@ def test_sbm_achievability_and_converse():
     # Finite-n: measured coded load near the Theorem-3 bound, gain near r.
     assert np.mean(vals) == pytest.approx(ach, rel=0.25)
     assert np.mean(uvals) / np.mean(vals) > 0.8 * r
+
+
+@pytest.mark.parametrize("model,kw,mk_alloc", [
+    ("er", dict(n=60, p=0.15), lambda: er_allocation(60, 5, 2)),
+    ("rb", dict(n1=36, n2=36, q=0.2), lambda: bipartite_allocation(36, 36, 6, 2)),
+    ("sbm", dict(n1=30, n2=30, p=0.25, q=0.08),
+     lambda: er_allocation(60, 5, 2, interleave=True)),
+    ("pl", dict(n=60, gamma=2.5),
+     lambda: er_allocation(60, 5, 2, interleave=True)),
+])
+def test_empirical_loads_csr_bitwise_equals_dense(model, kw, mk_alloc):
+    """`empirical_loads` accepts Graph / CSR / compiled plan; every form is
+    bitwise equal to the deprecated dense-adjacency path on all 4 models
+    (compile_plan_csr is schedule-identical to compile_plan)."""
+    g = graphs.sample(model, seed=3, **kw)
+    alloc = mk_alloc()
+    got = loads.empirical_loads(g, alloc)
+    with pytest.warns(DeprecationWarning, match="O\\(edges\\)"):
+        want = loads.empirical_loads(g.adj, alloc)
+    assert got == want                                # exact, not approx
+    assert loads.empirical_loads(g.csr, alloc) == want
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    assert loads.empirical_loads(plan, alloc) == want
+
+
+def test_empirical_loads_plan_alloc_mismatch_raises():
+    alloc = er_allocation(60, 5, 2)
+    g = graphs.erdos_renyi(60, 0.15, seed=0)
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    with pytest.raises(ValueError, match="compiled for \\(n=60"):
+        loads.empirical_loads(plan, er_allocation(80, 5, 2, pad=True))
+    # Same n but different r (the stale-plan-in-an-r-sweep mistake).
+    with pytest.raises(ValueError, match="r=2.*expects.*r=3"):
+        loads.empirical_loads(plan, er_allocation(60, 5, 3, pad=True))
+
+
+def test_empirical_loads_runs_past_dense_limit():
+    """The regression that motivated PR 5: measuring loads used to require
+    the dense [n, n] view, which hard-crashes above `dense_limit`."""
+    n = divisible_n(21_000, 4, 2)                    # > DENSE_LIMIT = 20_000
+    g = graphs.erdos_renyi(n, 30.0 / n, seed=1)
+    assert g.n > gm.DENSE_LIMIT
+    measured = loads.empirical_loads(g, er_allocation(n, 4, 2))
+    assert 0 < measured["coded"] < measured["uncoded"]
+    assert measured["gain"] > 1.5
 
 
 def test_remark10_time_model():

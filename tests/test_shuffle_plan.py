@@ -94,7 +94,7 @@ def test_plan_uncoded_matches_reference(K, r):
 def test_plan_coded_load_matches_legacy_enumeration_er(K, r):
     g, alloc = _er_case(K, r, n0=40, p=0.3)
     assert coded_load(g.adj, alloc) == coded_load_reference(g.adj, alloc)
-    measured = empirical_loads(g.adj, alloc)
+    measured = empirical_loads(g, alloc)
     assert measured["coded"] == coded_load_reference(g.adj, alloc)
     assert measured["uncoded"] == uncoded_load(g.adj, alloc)
 
