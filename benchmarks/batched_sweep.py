@@ -1,0 +1,93 @@
+"""Batched multi-query throughput: queries/sec vs batch width B.
+
+The coded Shuffle schedule is paid once per exchange regardless of how many
+query payload columns ride it, so serving B concurrent queries as one
+batched run must raise throughput: per-iteration wall-clock grows slower
+than B (gather/reduce vectorize over the payload axis; the plan index
+arithmetic is shared), while `shuffle_bits` grows exactly linearly - the
+schedule never recompiles. This sweep measures both effects on one
+`CompiledEngine` session, swapping a B-wide `personalized_pagerank` in per
+width via `with_program` (asserting the plan object is literally reused),
+then drives the same shape end to end through the `GraphService` admission
+queue (threaded submit -> coalesce -> batched run -> futures).
+
+The ``scale_batched_pagerank_*`` record is the CI-gated one
+(`check_regression.py`): its wall-clock is the per-iteration time at the
+widest B, and its derived string carries the full queries/sec-vs-B curve so
+the committed baseline documents the amortization.
+"""
+import time
+
+import numpy as np
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core.allocation import divisible_n, er_allocation
+from repro.serve import GraphService
+
+SMOKE = {"n": 360, "K": 4, "r": 2, "p": 0.05, "iters": 3,
+         "widths": (1, 2, 4, 8)}
+FULL = {"n": 2048, "K": 10, "r": 3, "p": 0.01, "iters": 10,
+        "widths": (1, 2, 4, 8, 16, 32)}
+
+
+def run(report, smoke=False):
+    cfg = SMOKE if smoke else FULL
+    n = divisible_n(cfg["n"], cfg["K"], cfg["r"])
+    g = graphs.erdos_renyi(n, cfg["p"], seed=7)
+    alloc = er_allocation(n, cfg["K"], cfg["r"])
+    iters, widths = cfg["iters"], cfg["widths"]
+
+    sess = engine.compile(
+        algo.personalized_pagerank(algo.uniform_prefs(n)), g, alloc, "coded")
+    plan = sess.plan
+    sess.run(1)                                # warm CSR/degree/plan caches
+
+    qps, last_dt, bits1 = [], 0.0, None
+    for B in widths:
+        s = sess.with_program(
+            algo.personalized_pagerank(algo.uniform_prefs(n, B)))
+        assert s.plan is plan, "batch width must not recompile the schedule"
+        t0 = time.perf_counter()
+        res = s.run(iters)
+        last_dt = time.perf_counter() - t0
+        if bits1 is None:
+            bits1 = res.shuffle_bits
+        assert res.shuffle_bits == B * bits1, \
+            "bits must scale with payload width only"
+        qps.append(B * iters / last_dt)
+        report(f"batched_pagerank_B{B}_n{n}", last_dt / iters * 1e6,
+               f"qps={qps[-1]:.0f} bits={res.shuffle_bits} "
+               f"s_per_iter={last_dt / iters:.4f}")
+    # Amortization must be visible: the widest batch serves strictly more
+    # queries per second than one-at-a-time execution.
+    assert qps[-1] > qps[0], \
+        f"no amortization: qps {qps[0]:.0f} -> {qps[-1]:.0f}"
+    curve = " ".join(f"B{b}:{q:.0f}" for b, q in zip(widths, qps))
+    report(f"scale_batched_pagerank_n{n}", last_dt / iters * 1e6,
+           f"qps_per_B=[{curve}] amortization={qps[-1] / qps[0]:.1f}x "
+           f"(one plan, one exchange/iter, bits = B x {bits1})")
+
+    serve = _serve_throughput(report, g, alloc, n, widths[-1], smoke)
+    return {"n": n, "widths": list(widths), "qps": qps, "serve": serve}
+
+
+def _serve_throughput(report, g, alloc, n, max_batch, smoke):
+    """End-to-end admission queue: threaded submits through GraphService."""
+    rng = np.random.default_rng(0)
+    iters = 3 if smoke else 5
+    n_q = 2 * max_batch
+    roots = rng.integers(0, n, size=n_q)
+    with GraphService(g, alloc, max_batch=max_batch, max_wait_s=0.05) as svc:
+        t0 = time.perf_counter()
+        futs = [svc.submit("sssp", int(s), iters=iters) for s in roots]
+        for f in futs:
+            f.result(timeout=600)
+        dt = time.perf_counter() - t0
+    stats = svc.stats
+    report(f"serve_sssp_qps_n{n}", dt / n_q * 1e6,
+           f"qps={n_q / dt:.0f} queries={stats.queries} "
+           f"batches={stats.batches} mean_batch={stats.mean_batch:.1f} "
+           f"bits_per_query={stats.bits_per_query:.0f}")
+    return {"qps": n_q / dt, "mean_batch": stats.mean_batch}

@@ -26,7 +26,8 @@ oracle = algo.reference_run(prog, g, iters)
 # ---- phase-time model (paper SSVI / Remark 10) ----
 # Map time ~ r (each server Maps r*n/K vertices); Shuffle time ~ load.
 alloc1 = er_allocation(n, K, 1)
-base_shuffle = engine.run(prog, g, alloc1, 1, "uncoded").normalized_load
+base_shuffle = engine.compile(prog, g, alloc1,
+                              "uncoded").run(1).normalized_load
 t_map, t_shuffle = 1.0, base_shuffle / 0.01   # normalized units
 print(f"T_map={t_map:.2f}  T_shuffle={t_shuffle:.2f}  "
       f"r* = sqrt(Ts/Tm) = {optimal_r(t_map, t_shuffle):.2f}\n")
@@ -35,7 +36,9 @@ print(f"{'r':>2} {'coded load':>11} {'T(r) model':>11}")
 best = (None, float("inf"))
 for r in range(1, K + 1):
     alloc = er_allocation(n, K, r)
-    res = engine.run(prog, g, alloc, iters, mode="coded-fast")
+    # Session per (graph, allocation): the plan compiles once here and is
+    # replayed for every iteration of the run.
+    res = engine.compile(prog, g, alloc, "coded-fast").run(iters)
     np.testing.assert_array_equal(res.state, oracle)
     t = total_time_model(r, t_map, res.normalized_load / 0.01, 0.1)
     if t < best[1]:

@@ -30,6 +30,18 @@ per-source values) and `finalize` (elementwise epilogue), which lets the
 engine route the blocked row reduction through the kernels/spmv Pallas tiles
 (`backend="spmv"`).
 
+Batched (multi-query) form: every edge-value form here is
+*batch-polymorphic* - state may be [n] (one query) or [n, B] (B concurrent
+queries), in which case `map_edge_values` returns [nnz, B] and
+`reduce_edges` segment-reduces each column independently (reduceat over
+axis 0 accumulates every column in the same canonical CSR entry order, so
+column b of a batched run is the same reduction sequence as a standalone
+run of that query - bitwise for min/integer programs, the contract the
+batched engine path relies on). `multi_sssp` and `personalized_pagerank`
+construct natively-batched programs (B roots / B preference vectors); the
+coded Shuffle schedule is value-agnostic, so one exchange carries all B
+columns (see `engine.CompiledEngine.run_batch`).
+
 The dense-matrix form is the blocked-dense TPU adaptation (DESIGN.md §3): a
 PageRank Map over a vertex block is one column-scaled adjacency tile, and the
 Reduce is a masked row reduction - both MXU/VPU friendly.
@@ -73,13 +85,22 @@ def segment_reduce(ufunc, vals: np.ndarray, indptr: np.ndarray,
     reduceat accumulates sequentially within a segment, so the reduction
     order is the canonical CSR entry order - the bitwise contract shared by
     the single-machine sparse oracle and the distributed sparse engine.
+    Batched vals [nnz, B] reduce each column independently (reduceat over
+    axis 0), in the same per-column order as a standalone [nnz] run.
     """
-    out = np.full(indptr.size - 1, identity, dtype=np.float32)
+    out = np.full((indptr.size - 1,) + vals.shape[1:], identity,
+                  dtype=np.float32)
     starts = indptr[:-1]
     nonempty = indptr[1:] > starts
     if vals.size:
-        out[nonempty] = ufunc.reduceat(vals, starts[nonempty])
+        out[nonempty] = ufunc.reduceat(vals, starts[nonempty], axis=0)
     return out
+
+
+def _per_edge(w: np.ndarray, state: np.ndarray) -> np.ndarray:
+    """Broadcast a per-edge/per-vertex vector against a possibly-batched
+    state: [m] for state [n], [m, 1] for state [n, B]."""
+    return w if state.ndim == 1 else w[:, None]
 
 
 def pagerank(damping: float = 0.15) -> VertexProgram:
@@ -90,7 +111,7 @@ def pagerank(damping: float = 0.15) -> VertexProgram:
 
     def map_source(g: Graph, state: np.ndarray) -> np.ndarray:
         deg = np.maximum(g.degrees(), 1)
-        return (state / deg).astype(np.float32)       # per-source value
+        return (state / _per_edge(deg, state)).astype(np.float32)
 
     def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
         return np.broadcast_to(map_source(g, state)[None, :], (g.n, g.n))
@@ -126,7 +147,8 @@ def sssp(source: int = 0) -> VertexProgram:
     def map_edge_values(g: Graph, state: np.ndarray) -> np.ndarray:
         # w is symmetric and edge_weights() shares one draw per undirected
         # edge, so state[j] + w_e == the dense (i, j) entry bitwise.
-        return (state[g.csr.indices] + g.edge_weights()).astype(np.float32)
+        w = g.edge_weights()
+        return (state[g.csr.indices] + _per_edge(w, state)).astype(np.float32)
 
     def reduce(vals, mask, state, g: Graph) -> np.ndarray:
         vals = np.where(mask, vals, np.inf)
@@ -171,13 +193,13 @@ def degree_count() -> VertexProgram:
         return np.zeros(g.n, dtype=np.float32)
 
     def map_source(g: Graph, state: np.ndarray) -> np.ndarray:
-        return np.ones(g.n, dtype=np.float32)
+        return np.ones(state.shape, dtype=np.float32)
 
     def map_values(g: Graph, state: np.ndarray) -> np.ndarray:
         return np.ones((g.n, g.n), dtype=np.float32)
 
     def map_edge_values(g: Graph, state: np.ndarray) -> np.ndarray:
-        return np.ones(g.csr.nnz, dtype=np.float32)
+        return np.ones((g.csr.nnz,) + state.shape[1:], dtype=np.float32)
 
     def finalize(acc: np.ndarray, state: np.ndarray, g: Graph) -> np.ndarray:
         return acc.astype(np.float32)
@@ -190,6 +212,88 @@ def degree_count() -> VertexProgram:
 
     return VertexProgram("degree", 0.0, init, map_values, reduce,
                          map_edge_values, reduce_edges, map_source, finalize)
+
+
+def _no_dense(name: str):
+    """Dense-form stub for natively-batched programs (sparse path only)."""
+
+    def stub(*_a, **_k):
+        raise ValueError(
+            f"{name} is a batched program: it has no dense [n, n] form; "
+            "run it on path='sparse' (the engine default)")
+    return stub
+
+
+def multi_sssp(sources) -> VertexProgram:
+    """B-query SSSP: state [n, B], column b is the distance vector from
+    ``sources[b]``.
+
+    The Map/Reduce forms are the batch-polymorphic sssp forms, so one coded
+    Shuffle exchange carries all B queries and column b is *bitwise* equal
+    to a standalone ``sssp(sources[b])`` run (min-reductions accumulate in
+    the same canonical CSR entry order per column).
+    """
+    sources = tuple(int(s) for s in np.atleast_1d(sources))
+    if not sources:
+        raise ValueError("multi_sssp needs at least one source")
+    single = sssp(sources[0])
+
+    def init(g: Graph) -> np.ndarray:
+        bad = [s for s in sources if not 0 <= s < g.n]
+        if bad:
+            raise ValueError(f"sources {bad} out of range [0, {g.n})")
+        d = np.full((g.n, len(sources)), np.inf, dtype=np.float32)
+        d[sources, np.arange(len(sources))] = 0.0
+        return d
+
+    return VertexProgram("multi_sssp", np.inf, init,
+                         _no_dense("multi_sssp"), _no_dense("multi_sssp"),
+                         single.map_edge_values, single.reduce_edges)
+
+
+def personalized_pagerank(prefs: np.ndarray,
+                          damping: float = 0.15) -> VertexProgram:
+    """B-query personalized PageRank: state [n, B], column b converges to
+    the PPR vector of preference (teleport) distribution ``prefs[:, b]``.
+
+    Iteration: state <- (1 - damping) * A_hat state + damping * prefs. The
+    Map and row-sum Reduce are the batch-polymorphic pagerank forms, so one
+    coded Shuffle exchange carries all B queries; per column the float-sum
+    reduction order equals the standalone order (within-ulp contract of
+    float sums, exactly as the single-query pagerank path). With a uniform
+    column prefs[:, b] = 1/n this is ordinary PageRank up to the rounding
+    of ``damping * float32(1/n)`` vs ``damping / n``.
+    """
+    prefs = np.asarray(prefs, dtype=np.float32)
+    if prefs.ndim == 1:
+        prefs = prefs[:, None]
+    if prefs.ndim != 2 or not prefs.size:
+        raise ValueError(f"prefs must be [n] or [n, B], got {prefs.shape}")
+    single = pagerank(damping)
+
+    def init(g: Graph) -> np.ndarray:
+        if prefs.shape[0] != g.n:
+            raise ValueError(
+                f"prefs are for n={prefs.shape[0]} vertices, graph has "
+                f"n={g.n}")
+        return prefs.copy()
+
+    def finalize(acc: np.ndarray, state: np.ndarray, g: Graph) -> np.ndarray:
+        return ((1.0 - damping) * acc + damping * prefs).astype(np.float32)
+
+    def reduce_edges(vals, indptr, state, g: Graph) -> np.ndarray:
+        return finalize(segment_reduce(np.add, vals, indptr, 0.0), state, g)
+
+    return VertexProgram("ppr", 0.0, init,
+                         _no_dense("personalized_pagerank"),
+                         _no_dense("personalized_pagerank"),
+                         single.map_edge_values, reduce_edges,
+                         single.map_source, finalize)
+
+
+def uniform_prefs(n: int, B: int = 1) -> np.ndarray:
+    """[n, B] uniform preference columns (ordinary-PageRank teleport)."""
+    return np.full((n, B), 1.0 / n, dtype=np.float32)
 
 
 def reference_run(program: VertexProgram, g: Graph, iters: int,

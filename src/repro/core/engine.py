@@ -45,6 +45,14 @@ Modes:
                 directly (skips the XOR simulation; used for large sweeps).
   coded-ref   - the literal per-group reference (`coded_shuffle.run_coded`),
                 dict delivery and dense reduce; kept for A/B validation.
+
+Sessions: `compile(program, g, alloc, mode, path=, backend=, **opts)` returns
+a `CompiledEngine` holding every reusable artifact (plan, edge tables, fused
+exchange) so repeated `.run(iters)` / `.run_batch(states, iters)` calls never
+recompile; `run(...)` remains as a thin one-shot wrapper over it. Batched
+states [n, B] (multi-source SSSP, personalized PageRank) ride ONE Shuffle
+exchange per iteration on the sparse path - the schedule is value-agnostic,
+so `bits_sent` scales as B x the single-query schedule bits.
 """
 from __future__ import annotations
 
@@ -62,19 +70,44 @@ from .uncoded_shuffle import missing_pairs
 
 PLAN_MODES = ("uncoded", "coded", "coded-fast")
 
+# Per-backend accepted `backend_opts` keys. Validated up front so a typo'd
+# option raises instead of being silently dropped (numpy takes none).
+_BACKEND_OPTS: dict[str, frozenset] = {
+    "numpy": frozenset(),
+    "spmv": frozenset({"bm", "interpret"}),
+    "fused": frozenset({"mesh", "encode", "interpret"}),
+}
+
+
+def _validate_backend_opts(backend: str, opts: dict) -> None:
+    if backend not in _BACKEND_OPTS:
+        raise ValueError(f"unknown backend {backend!r}")
+    unknown = sorted(set(opts) - _BACKEND_OPTS[backend])
+    if unknown:
+        accepted = sorted(_BACKEND_OPTS[backend])
+        raise ValueError(
+            f"backend {backend!r} got unknown option(s) {unknown}; "
+            f"accepted: {accepted if accepted else '(none)'}")
+
 
 @dataclasses.dataclass
 class EngineResult:
-    state: np.ndarray
+    state: np.ndarray            # [n] (or [n, B] from a batched run)
     iters: int
     shuffle_bits: int            # total over all iterations
     mode: str
 
     @property
+    def batch(self) -> int:
+        """Number of query columns carried (1 for unbatched runs)."""
+        return 1 if self.state.ndim == 1 else int(self.state.shape[1])
+
+    @property
     def normalized_load(self) -> float:
-        """Average per-iteration Definition-2 load."""
+        """Average per-iteration, per-query Definition-2 load."""
         n = self.state.shape[0]
-        return self.shuffle_bits / max(self.iters, 1) / (n * n * T_BITS)
+        return (self.shuffle_bits / max(self.iters, 1)
+                / (self.batch * n * n * T_BITS))
 
 
 def _reduce_distributed(program: VertexProgram, g: Graph, alloc: Allocation,
@@ -148,12 +181,21 @@ def _reduce_spmv(program: VertexProgram, g: Graph, state: np.ndarray, *,
     sum + elementwise finalize): acc = adj @ c computed strip-by-strip from
     the CSR view at O(bm * n) memory. Kernel float accumulation order
     differs from reduceat, so this backend is tolerance- (not bit-) exact.
+    Batched [n, B] states run the kernel once per query column and finalize
+    on the stacked [n, B] accumulator (finalize may close over per-query
+    data, e.g. personalized-PageRank preference columns).
     """
     from ..kernels.spmv import ops as spmv_ops
 
     c = program.map_source(g, state)
-    acc = spmv_ops.spmv_csr_rows(g.csr.indptr, g.csr.indices, c, g.n,
-                                 rows=g.csr.rows, bm=bm, interpret=interpret)
+
+    def one(col):
+        return spmv_ops.spmv_csr_rows(g.csr.indptr, g.csr.indices, col, g.n,
+                                      rows=g.csr.rows, bm=bm,
+                                      interpret=interpret)
+
+    acc = (np.stack([one(c[:, b]) for b in range(c.shape[1])], axis=1)
+           if c.ndim == 2 else one(c))
     return program.finalize(acc, state, g)
 
 
@@ -180,98 +222,205 @@ def _plan_bits(plan: ShufflePlan, mode: str) -> int:
     return plan.uncoded_bits
 
 
+class CompiledEngine:
+    """Compile-once session bound to (graph, allocation, mode, path, backend).
+
+    Holds every reusable artifact - the `ShufflePlan`, its CSR edge tables,
+    and (for backend="fused") the jitted multi-device exchange - so repeated
+    `.run` / `.run_batch` calls replay iterations with zero recompilation.
+    All of those artifacts are *program-independent* (the schedule is a
+    function of (graph, allocation) only), which is why `with_program`
+    rebinds the vertex program for free: the serving queue swaps in a fresh
+    `multi_sssp` / `personalized_pagerank` per admitted batch on one session
+    without ever touching the plan.
+    """
+
+    def __init__(self, program: VertexProgram, g: Graph,
+                 alloc: Allocation | None, mode: str = "coded", *,
+                 path: str = "auto", backend: str = "numpy",
+                 plan: ShufflePlan | None = None,
+                 backend_opts: dict | None = None):
+        backend_opts = dict(backend_opts or {})
+        sparse = _use_sparse(program, mode, path)
+        _validate_backend_opts(backend, backend_opts)
+        if backend == "spmv":
+            if not sparse:
+                raise ValueError("backend='spmv' requires the sparse path")
+            if program.map_source is None or program.finalize is None:
+                raise ValueError(
+                    f"{program.name} is not linear (no map_source/finalize); "
+                    "backend='spmv' needs a per-source Map and a sum Reduce")
+        if backend == "fused":
+            if not sparse:
+                raise ValueError("backend='fused' requires the sparse path")
+            if mode != "coded":
+                raise ValueError(
+                    "backend='fused' executes the coded multicast schedule; "
+                    f"use mode='coded' (got {mode!r})")
+            if alloc is None:
+                raise ValueError("backend='fused' needs an allocation")
+        self.program = program
+        self.g = g
+        self.alloc = alloc
+        self.mode = mode
+        self.path = path                      # as requested ("auto" kept)
+        self.backend = backend
+        self.backend_opts = backend_opts
+        self.sparse = sparse
+        self.distributed = mode != "single" and alloc is not None
+        if self.distributed and mode in PLAN_MODES and plan is None:
+            # Uncoded only consumes the missing set; skip the column tables.
+            # CSR entry point: adjacency-free and schedule-identical to the
+            # dense compile, so CSR-native graphs never materialize [n, n].
+            plan = compile_plan_csr(g.csr, alloc, schedule=mode != "uncoded")
+        self.plan = plan
+        self.tables = (plan.edge_tables(g.csr, alloc)
+                       if sparse and self.distributed and mode in PLAN_MODES
+                       else None)
+        self._fused = None
+
+    @property
+    def fused(self):
+        """The jitted shard_map exchange, built on first use and replayed
+        (compile-once / execute-many); value- and program-agnostic."""
+        if self.backend == "fused" and self._fused is None:
+            from .fused_shuffle import FusedSparseShuffle
+            self._fused = FusedSparseShuffle(self.plan, self.g.csr,
+                                             self.alloc, **self.backend_opts)
+        return self._fused
+
+    def with_program(self, program: VertexProgram) -> "CompiledEngine":
+        """Rebind the vertex program on the same compiled artifacts.
+
+        No recompilation: the plan, edge tables, and fused exchange carry
+        over verbatim (they never saw the program). This is the serving
+        queue's per-batch hook.
+        """
+        eng = CompiledEngine(program, self.g, self.alloc, self.mode,
+                             path=self.path, backend=self.backend,
+                             plan=self.plan, backend_opts=self.backend_opts)
+        eng._fused = self._fused
+        return eng
+
+    def _step(self, state: np.ndarray) -> tuple[np.ndarray, int]:
+        """One Map -> Shuffle -> Reduce round; returns (state', bits_sent)."""
+        program, g, alloc = self.program, self.g, self.alloc
+        if self.sparse:
+            if self.backend == "spmv":
+                # Coverage was verified when `tables` was built, so the
+                # blocked kernel reads each owner's full CSR row slice; the
+                # shuffled values would be recomputed per-source anyway, so
+                # only the (schedule-only) bit accounting is added. Batched
+                # states run the kernel per query column.
+                B = 1 if state.ndim == 1 else state.shape[1]
+                bits = _plan_bits(self.plan, self.mode) * B \
+                    if self.distributed else 0
+                return _reduce_spmv(program, g, state,
+                                    **self.backend_opts), bits
+            edge_vals = program.map_edge_values(g, state).astype(np.float32)
+            if not self.distributed:
+                return program.reduce_edges(edge_vals, g.csr.indptr,
+                                            state, g), 0
+            res = (self.fused.execute(edge_vals)
+                   if self.backend == "fused"
+                   else self.plan.execute_sparse(edge_vals, self.mode,
+                                                 self.tables))
+            state = _reduce_sparse(program, g, edge_vals, res,
+                                   self.tables.gather, state)
+            return state, res.bits_sent
+        values = program.map_values(g, state).astype(np.float32)
+        if not self.distributed:
+            return program.reduce(values, g.adj, state, g), 0
+        if self.mode in PLAN_MODES:
+            res = self.plan.execute(values, self.mode)
+            return _reduce_plan(program, g, alloc, values, res,
+                                state), res.bits_sent
+        if self.mode == "coded-ref":
+            ref = run_coded(g.adj, values, alloc)
+            delivered, bits = ref.delivered, ref.bits_sent
+            bits += _unicast_leftovers(g, alloc, values, delivered)
+            return _reduce_distributed(program, g, alloc, values, delivered,
+                                       state), bits
+        raise ValueError(f"unknown mode {self.mode!r}")
+
+    def run(self, iters: int, state: np.ndarray | None = None) -> EngineResult:
+        """Execute `iters` rounds from `program.init` (or a given state)."""
+        state = (self.program.init(self.g) if state is None
+                 else np.asarray(state, dtype=np.float32))
+        total_bits = 0
+        for _ in range(iters):
+            state, bits = self._step(state)
+            total_bits += bits
+        return EngineResult(state, iters, total_bits, self.mode)
+
+    def run_batch(self, states, iters: int) -> EngineResult:
+        """Run B queries on ONE Shuffle exchange per iteration.
+
+        `states` is [n, B] (or a sequence of B [n] columns, stacked here).
+        The program must be batch-polymorphic (`multi_sssp`,
+        `personalized_pagerank`, or any program whose map/reduce broadcast
+        over a trailing query axis). Result state is [n, B]; `shuffle_bits`
+        is exactly B x the single-query schedule bits.
+        """
+        if not self.sparse:
+            raise ValueError(
+                "run_batch needs the sparse path (dense [n, n] value "
+                "matrices have no query axis)")
+        if isinstance(states, (list, tuple)):
+            st = np.stack([np.asarray(s, dtype=np.float32) for s in states],
+                          axis=1)
+        else:
+            st = np.asarray(states, dtype=np.float32)
+        if st.ndim != 2 or st.shape[0] != self.g.n:
+            raise ValueError(
+                f"states must be [n={self.g.n}, B]; got shape {st.shape}")
+        return self.run(iters, state=st)
+
+    def loads(self) -> dict[str, float]:
+        """Exact Definition-2 loads of this session's schedule (no data
+        moves; see `loads.empirical_loads`)."""
+        if self.plan is None:
+            raise ValueError(
+                "loads() needs a compiled plan (a distributed plan mode)")
+        from .loads import empirical_loads
+        return empirical_loads(self.plan, self.alloc)
+
+
+def compile(program: VertexProgram, g: Graph, alloc: Allocation | None,
+            mode: str = "coded", *, path: str = "auto",
+            backend: str = "numpy", plan: ShufflePlan | None = None,
+            backend_opts: dict | None = None, **opts) -> CompiledEngine:
+    """Compile a reusable execution session (see `CompiledEngine`).
+
+    Backend options may be passed inline (``compile(..., backend="spmv",
+    bm=256)``) or via `backend_opts=`; both are validated against the
+    backend's accepted set. Pass a pre-compiled `plan` to share a schedule
+    across sessions.
+    """
+    merged = dict(backend_opts or {})
+    merged.update(opts)
+    return CompiledEngine(program, g, alloc, mode, path=path,
+                          backend=backend, plan=plan, backend_opts=merged)
+
+
 def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
         iters: int, mode: str = "coded",
         plan: ShufflePlan | None = None, *, path: str = "auto",
         backend: str = "numpy",
         backend_opts: dict | None = None) -> EngineResult:
-    """Execute `iters` rounds; plan modes compile the Shuffle schedule once
-    and replay it (pass a pre-compiled `plan` to amortize across runs).
+    """One-shot wrapper: `compile(...)` + `.run(iters)` (back-compat form).
 
     `path` picks the execution form (see module docstring); "auto" resolves
     to sparse whenever the program supplies the edge-value form. `backend`
     ("numpy" | "spmv" | "fused") selects the sparse implementation;
     `backend_opts` is forwarded to it (spmv: `bm`, `interpret` - pass
     ``{"interpret": False}`` on real TPU hardware; fused: `mesh`, `encode`,
-    `interpret` - see `fused_shuffle.FusedSparseShuffle`).
+    `interpret` - see `fused_shuffle.FusedSparseShuffle`). Unknown option
+    keys raise `ValueError` naming the accepted set. Prefer `compile` when
+    running the same (graph, allocation) more than once.
     """
-    backend_opts = backend_opts or {}
-    sparse = _use_sparse(program, mode, path)
-    if backend not in ("numpy", "spmv", "fused"):
-        raise ValueError(f"unknown backend {backend!r}")
-    if backend == "spmv":
-        if not sparse:
-            raise ValueError("backend='spmv' requires the sparse path")
-        if program.map_source is None or program.finalize is None:
-            raise ValueError(
-                f"{program.name} is not linear (no map_source/finalize); "
-                "backend='spmv' needs a per-source Map and a sum Reduce")
-    if backend == "fused":
-        if not sparse:
-            raise ValueError("backend='fused' requires the sparse path")
-        if mode != "coded":
-            raise ValueError(
-                "backend='fused' executes the coded multicast schedule; "
-                f"use mode='coded' (got {mode!r})")
-        if alloc is None:
-            raise ValueError("backend='fused' needs an allocation")
-    state = program.init(g)
-    total_bits = 0
-    distributed = mode != "single" and alloc is not None
-    if distributed and mode in PLAN_MODES and plan is None:
-        # Uncoded only consumes the missing set; skip the column tables.
-        # CSR entry point: adjacency-free and schedule-identical to the
-        # dense compile, so CSR-native graphs never materialize [n, n].
-        plan = compile_plan_csr(g.csr, alloc, schedule=mode != "uncoded")
-    tables = None
-    fused = None
-    if sparse and distributed and mode in PLAN_MODES:
-        tables = plan.edge_tables(g.csr, alloc)
-    if backend == "fused":
-        # Partitioned + jitted once; every iteration replays the same
-        # compiled shard_map exchange (compile-once / execute-many).
-        from .fused_shuffle import FusedSparseShuffle
-        fused = FusedSparseShuffle(plan, g.csr, alloc, **backend_opts)
-    for _ in range(iters):
-        if sparse:
-            if backend == "spmv":
-                # Coverage was verified when `tables` was built, so the
-                # blocked kernel reads each owner's full CSR row slice; the
-                # shuffled values would be recomputed per-source anyway, so
-                # only the (schedule-only) bit accounting is added.
-                if distributed:
-                    total_bits += _plan_bits(plan, mode)
-                state = _reduce_spmv(program, g, state, **backend_opts)
-                continue
-            edge_vals = program.map_edge_values(g, state).astype(np.float32)
-            if not distributed:
-                state = program.reduce_edges(edge_vals, g.csr.indptr,
-                                             state, g)
-                continue
-            res = (fused.execute(edge_vals) if fused is not None
-                   else plan.execute_sparse(edge_vals, mode, tables))
-            total_bits += res.bits_sent
-            state = _reduce_sparse(program, g, edge_vals, res,
-                                   tables.gather, state)
-            continue
-        values = program.map_values(g, state).astype(np.float32)
-        if not distributed:
-            state = program.reduce(values, g.adj, state, g)
-            continue
-        if mode in PLAN_MODES:
-            res = plan.execute(values, mode)
-            total_bits += res.bits_sent
-            state = _reduce_plan(program, g, alloc, values, res, state)
-        elif mode == "coded-ref":
-            ref = run_coded(g.adj, values, alloc)
-            delivered, bits = ref.delivered, ref.bits_sent
-            bits += _unicast_leftovers(g, alloc, values, delivered)
-            total_bits += bits
-            state = _reduce_distributed(program, g, alloc, values, delivered,
-                                        state)
-        else:
-            raise ValueError(f"unknown mode {mode!r}")
-    return EngineResult(state, iters, total_bits, mode)
+    return compile(program, g, alloc, mode, path=path, backend=backend,
+                   plan=plan, backend_opts=backend_opts).run(iters)
 
 
 def _unicast_leftovers(g: Graph, alloc: Allocation, values: np.ndarray,

@@ -281,36 +281,45 @@ class FusedSparseShuffle:
             raise ValueError(
                 f"mesh has {self.mesh.devices.size} devices but the plan "
                 f"has K={plan.K} servers (one device per server)")
-        self._fn = self._build(encode, interpret)
+        self._encode = encode
+        self._interpret = interpret
+        self._fn = self._build(encode, interpret, batched=False)
+        self._fn_batched = None       # built lazily on the first [nnz, B] call
         s = self.sched
         self._dev_tables = tuple(jnp.asarray(a) for a in (
             s.enc_l, s.enc_shift, s.enc_mask, s.dec_s, s.dec_w, s.dec_mask,
             s.dec_shift, s.strip_l, s.strip_shift, s.strip_mask))
 
-    def _build(self, encode: str, interpret: bool):
+    def _build(self, encode: str, interpret: bool, batched: bool):
         use_kernel = encode == "xor-kernel"
+        # Batched payloads append one trailing B axis to every *word* array
+        # (loc, buffers, deliveries); the schedule tables are value-agnostic
+        # and broadcast behind it. All device ops stay uint32 shift/mask/XOR,
+        # so payload column b is bitwise the unbatched exchange of column b.
+        bx = (lambda a: a[..., None]) if batched else (lambda a: a)
 
         def per_server(loc, enc_l, enc_shift, enc_mask, dec_s, dec_w,
                        dec_mask, dec_shift, strip_l, strip_shift, strip_mask):
-            loc = loc[0]                                  # [Lmax+1] uint32
+            loc = loc[0]                          # [Lmax+1] (or [Lmax+1, B])
             if encode == "jnp":
-                slotw = (loc[enc_l[0]] << enc_shift[0]) & enc_mask[0]
+                slotw = (loc[enc_l[0]] << bx(enc_shift[0])) & bx(enc_mask[0])
                 coded = jax.lax.reduce(slotw, jnp.uint32(0),
                                        jax.lax.bitwise_xor, (1,))
             else:
                 coded = xor_ops.xor_encode_slots(
                     loc, enc_l[0], enc_shift[0], enc_mask[0],
                     use_kernel=use_kernel, interpret=interpret)
-            allbufs = jax.lax.all_gather(coded, "servers")  # [K, W]
-            allbufs = jnp.pad(allbufs, ((0, 0), (0, 1)))    # zero col W
-            got = allbufs[dec_s[0], dec_w[0]]               # [Dmax, r]
-            sw = (loc[strip_l[0]] << strip_shift[0]) & strip_mask[0]
+            allbufs = jax.lax.all_gather(coded, "servers")  # [K, W(, B)]
+            pad = ((0, 0), (0, 1)) + (((0, 0),) if batched else ())
+            allbufs = jnp.pad(allbufs, pad)                 # zero col W
+            got = allbufs[dec_s[0], dec_w[0]]               # [Dmax, r(, B)]
+            sw = (loc[strip_l[0]] << bx(strip_shift[0])) & bx(strip_mask[0])
             strip = jax.lax.reduce(sw, jnp.uint32(0),
                                    jax.lax.bitwise_xor, (2,))
-            rec = ((got ^ strip) & dec_mask[0]) >> dec_shift[0]
+            rec = ((got ^ strip) & bx(dec_mask[0])) >> bx(dec_shift[0])
             words = jax.lax.reduce(rec, jnp.uint32(0),
                                    jax.lax.bitwise_or, (1,))
-            return words[None]                              # [1, Dmax]
+            return words[None]                              # [1, Dmax(, B)]
 
         # pallas_call has no replication rule, so the kernel route must
         # disable the output-replication checker (outputs are per-shard
@@ -327,24 +336,42 @@ class FusedSparseShuffle:
         (k, i, j) order, bitwise equal to what `execute_coded_sparse`
         would deliver. The whole device computation is uint32 shift/mask/
         XOR - no float ops - which is what makes equality exact.
+
+        Batched edge_words [nnz, B] -> [M, B]: one exchange moves all B
+        payload columns (word arrays gain a trailing B axis; the jitted
+        schedule tables are shared), column-b bitwise equal to the
+        unbatched exchange of that column.
         """
         s = self.sched
-        ew = np.append(np.ascontiguousarray(edge_words, np.uint32),
-                       np.uint32(0))
-        loc = np.zeros((s.K, s.Lmax + 1), dtype=np.uint32)
+        ew = np.ascontiguousarray(edge_words, np.uint32)
+        batched = ew.ndim == 2
+        if batched:
+            if self._fn_batched is None:
+                self._fn_batched = self._build(self._encode, self._interpret,
+                                               batched=True)
+            ew = np.concatenate(
+                [ew, np.zeros((1, ew.shape[1]), np.uint32)], axis=0)
+            loc = np.zeros((s.K, s.Lmax + 1, ew.shape[1]), dtype=np.uint32)
+            fn = self._fn_batched
+        else:
+            ew = np.append(ew, np.uint32(0))
+            loc = np.zeros((s.K, s.Lmax + 1), dtype=np.uint32)
+            fn = self._fn
         loc[:, :s.Lmax] = ew[s.loc_e]
-        out = np.asarray(self._fn(jnp.asarray(loc), *self._dev_tables))
+        out = np.asarray(fn(jnp.asarray(loc), *self._dev_tables))
         plan = self.plan
         M = plan.all_k.size
         return out[plan.all_k, np.arange(M, dtype=np.int64)
                    - plan.ptr[plan.all_k]]
 
     def execute(self, edge_vals: np.ndarray) -> PlanShuffleResult:
-        """Drop-in peer of `ShufflePlan.execute_coded_sparse`."""
+        """Drop-in peer of `ShufflePlan.execute_coded_sparse` (batched
+        [nnz, B] edge values supported the same way)."""
         plan = self.plan
-        words = self.exchange_words(
-            floats_to_words(np.asarray(edge_vals, np.float32)))
-        bits = plan.coded_bits + plan.leftover_bits
+        edge_vals = np.asarray(edge_vals, np.float32)
+        words = self.exchange_words(floats_to_words(edge_vals))
+        bits = ((plan.coded_bits + plan.leftover_bits)
+                * (edge_vals.shape[1] if edge_vals.ndim == 2 else 1))
         return PlanShuffleResult(plan.all_k, plan.all_i, plan.all_j,
                                  words_to_floats(words), plan.ptr, bits,
                                  plan.n)

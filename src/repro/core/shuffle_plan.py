@@ -52,31 +52,48 @@ from .bitcodec import (T_BITS, floats_to_words, segment_bounds, segment_words,
 from .graph_models import CSR
 
 
+def _batch_width(vals: np.ndarray) -> int:
+    """Payload columns of a value array: 1 for [m], B for [m, B]."""
+    return 1 if vals.ndim == 1 else int(vals.shape[1])
+
+
 @dataclasses.dataclass
 class PlanShuffleResult:
     """One executed Shuffle: delivery arrays (sorted by receiver) + load.
 
     Array-form counterpart of `uncoded_shuffle.ShuffleResult`; `delivered`
     materializes the legacy dict layout lazily for compatibility/tests.
+
+    Batched execution (values [M, B]) delivers B independent query payloads
+    through the one schedule; `bits_sent` then counts all B payload columns
+    (B x the single-query schedule bits - the schedule itself never grows).
     """
 
     k: np.ndarray                # [M] int32 receiving server, ascending
     i: np.ndarray                # [M] int32 row index of the value
     j: np.ndarray                # [M] int32 column index of the value
-    values: np.ndarray           # [M] float32 recovered values
+    values: np.ndarray           # [M] (or [M, B]) float32 recovered values
     ptr: np.ndarray              # [K+1] CSR offsets into the arrays per server
     bits_sent: int
     n: int
 
     @property
+    def batch(self) -> int:
+        """Payload columns carried by this Shuffle (1 = unbatched)."""
+        return 1 if self.values.ndim == 1 else int(self.values.shape[1])
+
+    @property
     def normalized_load(self) -> float:
-        """Definition 2: total bits / (n^2 T)."""
-        return self.bits_sent / (self.n * self.n * T_BITS)
+        """Definition 2, per query: bits / (B n^2 T)."""
+        return self.bits_sent / (self.batch * self.n * self.n * T_BITS)
 
     @functools.cached_property
     def delivered(self) -> dict[int, dict[tuple[int, int], float]]:
         """Legacy per-value dict layout, built once and cached (tests and
         the coded-ref comparison path access it repeatedly)."""
+        if self.values.ndim != 1:
+            raise ValueError("delivered dict layout is single-query only; "
+                             "index a batched result's values [M, B] instead")
         out: dict[int, dict[tuple[int, int], float]] = {
             k: {} for k in range(len(self.ptr) - 1)}
         for k, i, j, v in zip(self.k, self.i, self.j, self.values):
@@ -209,9 +226,18 @@ class ShufflePlan:
     # ---- per-iteration executors ----
 
     def _slot_words(self, pair_vals: np.ndarray) -> np.ndarray:
-        """[C, r] pre-masked left-aligned segment words for this iteration."""
-        words = np.append(floats_to_words(pair_vals), np.uint32(0))  # sentinel
-        return (words[self.slot_pair] << self.slot_shift) & self.slot_mask
+        """Pre-masked left-aligned segment words for this iteration:
+        [C, r] for single-query pair_vals [P], [C, r, B] for batched
+        pair_vals [P, B] (the shift/mask tables are value-agnostic, so the
+        payload axis just broadcasts behind them)."""
+        words = floats_to_words(pair_vals)
+        if words.ndim == 1:
+            words = np.append(words, np.uint32(0))       # sentinel zero word
+            return (words[self.slot_pair] << self.slot_shift) & self.slot_mask
+        sentinel = np.zeros((1, words.shape[1]), dtype=np.uint32)
+        words = np.concatenate([words, sentinel], axis=0)
+        return ((words[self.slot_pair] << self.slot_shift[..., None])
+                & self.slot_mask[..., None])
 
     def execute_coded(self, values: np.ndarray, *, backend: str = "numpy",
                       interpret: bool = True) -> PlanShuffleResult:
@@ -230,7 +256,15 @@ class ShufflePlan:
     def _coded_result(self, pair_vals: np.ndarray, left_vals: np.ndarray, *,
                       backend: str = "numpy",
                       interpret: bool = True) -> PlanShuffleResult:
-        """Coded encode/decode from already-gathered scheduled values."""
+        """Coded encode/decode from already-gathered scheduled values.
+
+        Batched pair_vals [P, B] / left_vals [L, B] ride the identical
+        schedule with a trailing payload axis: every shift/mask/XOR below is
+        elementwise per payload column, so column b of the batched result is
+        bitwise the single-query result of that column's values, and the
+        bits-on-the-wire are exactly B x the schedule bits.
+        """
+        batched = pair_vals.ndim == 2
         slotw = self._slot_words(pair_vals)
         if backend == "numpy":
             coded = np.bitwise_xor.reduce(slotw, axis=1)
@@ -246,21 +280,25 @@ class ShufflePlan:
                 slotw, use_kernel=use_kernel, interpret=interpret))
         else:
             raise ValueError(f"unknown backend {backend!r}")
-        rec = (coded[:, None] ^ strip) & self.slot_mask
+        mask = self.slot_mask[..., None] if batched else self.slot_mask
+        seg_shift = (self.seg_shift[None, :, None] if batched
+                     else self.seg_shift[None, :])
+        rec = (coded[:, None] ^ strip) & mask
         # Gather each pair's r recovered segments and shift them into place.
-        segs = rec[self.pair_col, self.pair_slot] >> self.seg_shift[None, :]
+        segs = rec[self.pair_col, self.pair_slot] >> seg_shift
         pair_words = np.bitwise_or.reduce(segs, axis=1)
-        out = np.empty(self.all_k.size, dtype=np.float32)
+        out = np.empty((self.all_k.size,) + pair_vals.shape[1:],
+                       dtype=np.float32)
         out[self.pos_covered] = words_to_floats(pair_words)
         out[self.pos_left] = left_vals
-        bits = self.coded_bits + self.leftover_bits
+        bits = (self.coded_bits + self.leftover_bits) * _batch_width(out)
         return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
                                  self.ptr, bits, self.n)
 
     def _direct_result(self, vals: np.ndarray, bits: int) -> PlanShuffleResult:
         out = np.ascontiguousarray(vals, np.float32)
         return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
-                                 self.ptr, bits, self.n)
+                                 self.ptr, bits * _batch_width(out), self.n)
 
     def execute_fast(self, values: np.ndarray) -> PlanShuffleResult:
         """Coded loads with direct value movement (legacy "coded-fast")."""
@@ -331,7 +369,9 @@ class ShufflePlan:
                              backend: str = "numpy",
                              interpret: bool = True) -> PlanShuffleResult:
         """Coded Shuffle from a [nnz] edge-value vector; bit-exact against
-        `execute_coded` on the dense scatter of the same values."""
+        `execute_coded` on the dense scatter of the same values. Batched
+        edge_vals [nnz, B] carry B query payloads through the one schedule
+        (values [M, B] out, bits = B x schedule bits)."""
         self._require_schedule()
         return self._coded_result(edge_vals[tables.pair_e],
                                   edge_vals[tables.left_e],

@@ -35,8 +35,20 @@ def xor_encode_columns(slot_words, *, lanes: int = 128,
     so the Pallas kernel sees VPU-shaped uint32 tiles (lane dim 128) instead
     of W=1 slivers - this is the path that feeds the kernel realistic
     workloads (C ~ thousands of coded columns per Shuffle).
+
+    Batched-payload route: [C, r, B] slot words (B query payloads per slot,
+    the multi-query Shuffle) fold the payload axis into the column axis -
+    XOR is elementwise, so the C*B fold is free - and return [C, B] coded
+    columns; payload column b is bitwise the single-payload encode of its
+    slice.
     """
     slot_words = jnp.asarray(slot_words, jnp.uint32)
+    if slot_words.ndim == 3:                            # [C, r, B] payloads
+        c, r, b = slot_words.shape
+        folded = jnp.swapaxes(slot_words, 1, 2).reshape(c * b, r)
+        out = xor_encode_columns(folded, lanes=lanes, use_kernel=use_kernel,
+                                 interpret=interpret)
+        return out.reshape(c, b)
     c, r = slot_words.shape
     if c == 0:                     # empty schedule: nothing to multicast
         return jnp.zeros(0, jnp.uint32)
@@ -56,7 +68,9 @@ def xor_strip_columns(slot_words, *, lanes: int = 128,
     This is the receiver side of the coded Shuffle: the receiver at slot t
     XORs the locally-recomputable slots out of the coded column, leaving its
     own segment (`coded ^ strip[:, t]`). r is small and static, so the
-    per-slot loop unrolls into r batched kernel calls.
+    per-slot loop unrolls into r batched kernel calls. Batched payloads
+    [C, r, B] -> [C, r, B] strips via the same per-slot loop (the slot axis
+    is axis 1 in both layouts).
     """
     slot_words = jnp.asarray(slot_words, jnp.uint32)
     _, r = slot_words.shape
@@ -82,8 +96,14 @@ def xor_encode_slots(loc: jnp.ndarray, idx: jnp.ndarray, shift: jnp.ndarray,
 
     loc [L+1] uint32 local words (last entry 0 = sentinel); idx [W, r] int
     into loc; shift/mask [W, r] uint32 -> [W] uint32 coded columns.
+    Batched loc [L+1, B] (B payload words per local value) gathers to
+    [W, r, B], the shift/mask tables broadcast behind the payload axis, and
+    the batched-column route returns [W, B] coded columns.
     """
-    slotw = (loc[idx] << shift) & mask
+    gathered = loc[idx]
+    if gathered.ndim == 3:
+        shift, mask = shift[..., None], mask[..., None]
+    slotw = (gathered << shift) & mask
     return xor_encode_columns(slotw, lanes=lanes, use_kernel=use_kernel,
                               interpret=interpret)
 

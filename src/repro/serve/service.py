@@ -1,0 +1,182 @@
+"""Admission-batching request queue over one compiled coded-Shuffle session.
+
+Serving shape: queries arrive one at a time, but the exchange is cheapest
+per query when B of them ride one Shuffle (schedule bits are paid once per
+payload column, never per compile). The queue therefore trades a bounded
+admission delay (`max_wait_s`) for batch width (`max_batch`), exactly the
+admission-batching pattern of inference servers.
+
+Batches must share a program family and an iteration count to fuse into one
+run, so the queue keeps one lane per (kind, iters) pair and admits from the
+fullest lane first. Per admitted batch it builds the batched program
+(`multi_sssp` over the collected roots, `personalized_pagerank` over the
+stacked preference columns) and rebinds it on the session via
+`CompiledEngine.with_program` - no plan recompile, no re-jit of the fused
+exchange - then fans `state[:, b]` back to each caller's future.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from ..core import algorithms, engine
+from ..core.allocation import Allocation
+from ..core.graph_models import Graph
+from ..core.shuffle_plan import ShufflePlan
+
+QUERY_KINDS = ("sssp", "ppr")
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Counters over the service's lifetime (read them after `close`)."""
+    queries: int = 0
+    batches: int = 0
+    shuffle_bits: int = 0        # total over all batched runs
+
+    @property
+    def mean_batch(self) -> float:
+        """Realized amortization: queries served per Shuffle-sharing run."""
+        return self.queries / self.batches if self.batches else 0.0
+
+    @property
+    def bits_per_query(self) -> float:
+        return self.shuffle_bits / self.queries if self.queries else 0.0
+
+
+class GraphService:
+    """Batched query server on one graph + allocation.
+
+    Usage::
+
+        with GraphService(g, alloc, max_batch=8, max_wait_s=0.005) as svc:
+            futs = [svc.submit("sssp", root, iters=10) for root in roots]
+            dists = [f.result() for f in futs]
+
+    One background worker admits batches; `submit` is thread-safe and
+    returns a `concurrent.futures.Future` resolving to that query's [n]
+    result column. Query kinds: "sssp" (arg = root vertex id) and "ppr"
+    (arg = [n] preference vector).
+    """
+
+    def __init__(self, g: Graph, alloc: Allocation, mode: str = "coded", *,
+                 backend: str = "numpy", max_batch: int = 8,
+                 max_wait_s: float = 0.005, plan: ShufflePlan | None = None,
+                 backend_opts: dict | None = None, **opts):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
+        merged = dict(backend_opts or {})
+        merged.update(opts)
+        # The session is compiled once against a placeholder program; every
+        # admitted batch swaps its own program in via `with_program` (the
+        # plan/tables/fused exchange never depend on it).
+        self.session = engine.compile(
+            algorithms.multi_sssp([0]), g, alloc, mode, path="sparse",
+            backend=backend, plan=plan, backend_opts=merged)
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.stats = ServeStats()
+        self._lanes: dict[tuple, collections.deque] = collections.defaultdict(
+            collections.deque)
+        self._cv = threading.Condition()
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._loop, name="graph-serve", daemon=True)
+        self._worker.start()
+
+    # -- client side -------------------------------------------------------
+
+    def submit(self, kind: str, arg, iters: int = 10) -> Future:
+        """Enqueue one query; returns a Future of its [n] result column."""
+        n = self.session.g.n
+        if kind == "sssp":
+            arg = int(arg)
+            if not 0 <= arg < n:
+                raise ValueError(f"sssp root {arg} out of range [0, {n})")
+        elif kind == "ppr":
+            arg = np.asarray(arg, dtype=np.float32)
+            if arg.shape != (n,):
+                raise ValueError(
+                    f"ppr preference vector must be [n={n}]; got {arg.shape}")
+        else:
+            raise ValueError(
+                f"unknown query kind {kind!r}; accepted: {QUERY_KINDS}")
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            self._lanes[(kind, int(iters))].append((arg, fut))
+            self._cv.notify_all()
+        return fut
+
+    def loads(self) -> dict[str, float]:
+        """Schedule loads of the underlying session (per payload column)."""
+        return self.session.loads()
+
+    def close(self, *, wait: bool = True) -> None:
+        """Stop admitting; drain already-queued queries, then stop."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if wait:
+            self._worker.join()
+
+    def __enter__(self) -> "GraphService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker side -------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._closed and not any(self._lanes.values()):
+                    self._cv.wait()
+                if self._closed and not any(self._lanes.values()):
+                    return
+                lane = max(self._lanes, key=lambda k: len(self._lanes[k]))
+                # Admission window: hold the batch open until it is full,
+                # the timeout lapses, or the service is draining.
+                deadline = time.monotonic() + self.max_wait_s
+                while (not self._closed
+                       and len(self._lanes[lane]) < self.max_batch):
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        break
+                    self._cv.wait(timeout=left)
+                q = self._lanes[lane]
+                batch = [q.popleft()
+                         for _ in range(min(self.max_batch, len(q)))]
+                if not q:
+                    del self._lanes[lane]
+            if batch:
+                self._run_batch(lane, batch)
+
+    def _run_batch(self, lane: tuple, batch: list) -> None:
+        kind, iters = lane
+        args = [a for a, _ in batch]
+        futs = [f for _, f in batch]
+        try:
+            if kind == "sssp":
+                prog = algorithms.multi_sssp(args)
+            else:
+                prog = algorithms.personalized_pagerank(
+                    np.stack(args, axis=1))
+            res = self.session.with_program(prog).run(iters)
+        except Exception as e:                 # fan the failure out too
+            for f in futs:
+                f.set_exception(e)
+            return
+        with self._cv:
+            self.stats.queries += len(batch)
+            self.stats.batches += 1
+            self.stats.shuffle_bits += res.shuffle_bits
+        for b, f in enumerate(futs):
+            f.set_result(res.state[:, b])

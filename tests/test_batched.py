@@ -1,0 +1,293 @@
+"""Batched multi-query parity: B payload columns on ONE coded Shuffle.
+
+The schedule is value-agnostic, so batching must be a pure payload change:
+B=1 batched is bitwise the unbatched path, column b of a B>1 run is bitwise
+the standalone run of that query for exact programs (sssp - min reductions)
+and within-ulp for float sums (pagerank), and `bits_sent` scales with B
+only through payload width - the schedule (group count, slot layout,
+leftovers) never changes. Covered per mode (coded / uncoded / coded-fast)
+and backend (numpy / spmv in process; fused on 8 forced host devices in a
+subprocess, same pattern as test_fused_sparse.py).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core.allocation import divisible_n, er_allocation
+from repro.core.bitcodec import floats_to_words
+from repro.core.shuffle_plan import compile_plan_csr
+
+MODES = ("coded", "uncoded", "coded-fast")
+
+
+def _case(n=60, K=4, r=2, p=0.15, seed=11):
+    n = divisible_n(n, K, r)
+    return graphs.erdos_renyi(n, p, seed=seed), er_allocation(n, K, r)
+
+
+# ---------------------------------------------------------------------------
+# Plan-executor level: [nnz, B] through the same schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execute", ["execute_coded_sparse",
+                                     "execute_uncoded_sparse",
+                                     "execute_fast_sparse"])
+def test_executor_batched_columns_bitwise_and_bits_scale(execute):
+    g, alloc = _case()
+    plan = compile_plan_csr(g.csr, alloc)
+    tables = plan.edge_tables(g.csr, alloc)
+    rng = np.random.default_rng(3)
+    B = 4
+    vals = rng.random((g.csr.nnz, B)).astype(np.float32)
+    fn = getattr(plan, execute)
+    rB = fn(vals, tables)
+    assert rB.values.shape[1:] == (B,)
+    assert rB.batch == B
+    r0 = fn(vals[:, 0], tables)
+    # B=1 parity: a batched run's column IS the unbatched run, bit for bit.
+    assert np.array_equal(floats_to_words(rB.values[:, 0]),
+                          floats_to_words(r0.values))
+    for b in range(B):
+        rb = fn(vals[:, b], tables)
+        assert np.array_equal(floats_to_words(rB.values[:, b]),
+                              floats_to_words(rb.values))
+    # Payload-width-only bits scaling; per-query normalized load invariant.
+    assert rB.bits_sent == B * r0.bits_sent
+    assert rB.normalized_load == pytest.approx(r0.normalized_load)
+
+
+def test_executor_batched_delivered_dict_refuses():
+    g, alloc = _case()
+    plan = compile_plan_csr(g.csr, alloc)
+    tables = plan.edge_tables(g.csr, alloc)
+    res = plan.execute_coded_sparse(
+        np.ones((g.csr.nnz, 2), dtype=np.float32), tables)
+    with pytest.raises(ValueError, match="batched"):
+        res.delivered()
+
+
+def test_segment_reduce_batched_columns_match_standalone():
+    g, _ = _case()
+    rng = np.random.default_rng(5)
+    vals = rng.random((g.csr.nnz, 3)).astype(np.float32)
+    for ufunc, ident in ((np.add, 0.0), (np.minimum, np.inf)):
+        batched = algo.segment_reduce(ufunc, vals, g.csr.indptr, ident)
+        for b in range(3):
+            col = algo.segment_reduce(ufunc, vals[:, b], g.csr.indptr, ident)
+            assert np.array_equal(batched[:, b], col)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: multi_sssp / personalized_pagerank per mode and backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_multi_sssp_columns_bitwise_per_mode(mode):
+    g, alloc = _case()
+    roots = [0, 7, 19]
+    sess = engine.compile(algo.multi_sssp(roots), g, alloc, mode)
+    rB = sess.run(6)
+    assert rB.state.shape == (g.n, len(roots))
+    bits1 = None
+    for b, s in enumerate(roots):
+        r1 = engine.compile(algo.sssp(s), g, alloc, mode,
+                            plan=sess.plan).run(6)
+        assert np.array_equal(rB.state[:, b], r1.state), (mode, b)
+        bits1 = r1.shuffle_bits
+    assert rB.shuffle_bits == len(roots) * bits1
+    assert rB.batch == len(roots)
+    assert rB.normalized_load == pytest.approx(r1.normalized_load)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_personalized_pagerank_columns_within_ulp_per_mode(mode):
+    g, alloc = _case()
+    rng = np.random.default_rng(9)
+    prefs = rng.random((g.n, 3)).astype(np.float32)
+    prefs /= prefs.sum(axis=0)
+    rB = engine.compile(algo.personalized_pagerank(prefs),
+                        g, alloc, mode).run(5)
+    for b in range(3):
+        r1 = engine.compile(algo.personalized_pagerank(prefs[:, b]),
+                            g, alloc, mode).run(5)
+        # Float sums: the per-column reduceat order is identical, so this
+        # is within-ulp by construction (empirically bitwise on numpy).
+        np.testing.assert_allclose(rB.state[:, b], r1.state[:, 0],
+                                   rtol=1e-6, atol=1e-9)
+    assert rB.shuffle_bits == 3 * r1.shuffle_bits
+
+
+def test_b1_batched_sssp_bitwise_vs_current_unbatched_path():
+    g, alloc = _case()
+    for mode in MODES:
+        rB = engine.compile(algo.multi_sssp([5]), g, alloc, mode).run(6)
+        r1 = engine.compile(algo.sssp(5), g, alloc, mode).run(6)
+        assert rB.state.shape == (g.n, 1)
+        assert np.array_equal(rB.state[:, 0], r1.state)
+        assert rB.shuffle_bits == r1.shuffle_bits
+
+
+def test_spmv_backend_batched_ppr_matches_numpy_backend():
+    g, alloc = _case()
+    prefs = algo.uniform_prefs(g.n, B=3)
+    prog = algo.personalized_pagerank(prefs)
+    r_np = engine.compile(prog, g, alloc, "coded").run(4)
+    r_sp = engine.compile(prog, g, alloc, "coded", backend="spmv",
+                          bm=32).run(4)
+    assert r_sp.state.shape == (g.n, 3)
+    np.testing.assert_allclose(r_sp.state, r_np.state, rtol=1e-5, atol=1e-8)
+    # spmv accounts schedule bits per payload column like the real movers.
+    assert r_sp.shuffle_bits == r_np.shuffle_bits
+
+
+def test_no_per_query_recompile_schedule_shared():
+    g, alloc = _case()
+    sess = engine.compile(algo.multi_sssp([0]), g, alloc, "coded")
+    plan = sess.plan
+    bits1 = sess.run(4).shuffle_bits
+    for B in (2, 5):
+        wide = sess.with_program(algo.multi_sssp(list(range(B))))
+        assert wide.plan is plan            # same compiled schedule object
+        assert wide.tables is sess.tables   # cached edge tables shared
+        assert wide.run(4).shuffle_bits == B * bits1
+
+
+def test_batched_programs_refuse_dense_path():
+    g, alloc = _case()
+    with pytest.raises(ValueError, match="sparse"):
+        engine.compile(algo.multi_sssp([0, 1]), g, alloc, "coded",
+                       path="dense").run(1)
+
+
+def test_run_batch_validates_and_stacks():
+    g, alloc = _case()
+    sess = engine.compile(algo.multi_sssp([0]), g, alloc, "coded")
+    with pytest.raises(ValueError, match=rf"n={g.n}"):
+        sess.run_batch(np.zeros((3, 2), dtype=np.float32), 1)
+    prog = algo.multi_sssp([0, 9])
+    cols = list(prog.init(g).T)             # sequence-of-columns form
+    r_seq = sess.with_program(prog).run_batch(cols, 5)
+    r_arr = sess.with_program(prog).run_batch(prog.init(g), 5)
+    assert np.array_equal(r_seq.state, r_arr.state)
+
+
+def test_multi_sssp_and_ppr_validate_inputs():
+    g, _ = _case()
+    with pytest.raises(ValueError, match="at least one"):
+        algo.multi_sssp([])
+    with pytest.raises(ValueError, match="out of range"):
+        algo.multi_sssp([0, g.n]).init(g)
+    with pytest.raises(ValueError, match="n="):
+        algo.personalized_pagerank(np.ones(7, dtype=np.float32)).init(g)
+
+
+# ---------------------------------------------------------------------------
+# xor_code batched-column route (jax on CPU, in process)
+# ---------------------------------------------------------------------------
+
+def test_xor_encode_columns_batched_payload_axis():
+    import jax.numpy as jnp
+
+    from repro.kernels.xor_code import ops as xops
+
+    rng = np.random.default_rng(7)
+    slot = rng.integers(0, 2**32, size=(37, 3, 4), dtype=np.uint32)
+    out = np.asarray(xops.xor_encode_columns(jnp.asarray(slot),
+                                             use_kernel=False))
+    assert out.shape == (37, 4)
+    for b in range(4):
+        col = np.asarray(xops.xor_encode_columns(jnp.asarray(slot[:, :, b]),
+                                                 use_kernel=False))
+        assert np.array_equal(out[:, b], col)
+    # Empty schedule stays shape-correct.
+    empty = np.asarray(xops.xor_encode_columns(
+        jnp.zeros((0, 3, 4), jnp.uint32), use_kernel=False))
+    assert empty.shape == (0, 4)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-device exchange (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT_FUSED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core.allocation import divisible_n, er_allocation
+from repro.core.bitcodec import floats_to_words
+from repro.core.fused_shuffle import FusedSparseShuffle
+from repro.core.shuffle_plan import compile_plan_csr
+
+out = {}
+n = divisible_n(48, 4, 2)
+g = graphs.erdos_renyi(n, 0.2, seed=11)
+alloc = er_allocation(n, 4, 2)
+plan = compile_plan_csr(g.csr, alloc)
+tables = plan.edge_tables(g.csr, alloc)
+fx = FusedSparseShuffle(plan, g.csr, alloc)
+
+rng = np.random.default_rng(2)
+vals = rng.random((g.csr.nnz, 3)).astype(np.float32)
+
+# Word-level: batched fused delivery vs the NumPy executor, bitwise, and
+# vs its own unbatched route per column (B=1 parity included).
+ref = plan.execute_coded_sparse(vals, tables)
+res = fx.execute(vals)
+out["words_bitwise"] = bool(np.array_equal(floats_to_words(ref.values),
+                                           floats_to_words(res.values)))
+out["bits_scale"] = bool(res.bits_sent == ref.bits_sent
+                         and res.bits_sent
+                         == 3 * fx.execute(vals[:, 0]).bits_sent)
+percol = True
+for b in range(3):
+    r1 = fx.execute(vals[:, b])
+    percol = percol and np.array_equal(floats_to_words(res.values[:, b]),
+                                       floats_to_words(r1.values))
+out["per_column_bitwise"] = bool(percol)
+
+# Engine level: batched multi-root SSSP, fused == numpy == standalone runs.
+roots = [0, 5, 11]
+sess = engine.compile(algo.multi_sssp(roots), g, alloc, "coded",
+                      backend="fused")
+rB = sess.run(5)
+rn = engine.compile(algo.multi_sssp(roots), g, alloc, "coded",
+                    plan=plan).run(5)
+out["engine_batched_bitwise"] = bool(np.array_equal(rB.state, rn.state))
+standalone = True
+for b, s in enumerate(roots):
+    r1 = engine.compile(algo.sssp(s), g, alloc, "coded", plan=plan,
+                        backend="fused").run(5)
+    standalone = standalone and np.array_equal(rB.state[:, b], r1.state)
+out["engine_columns_standalone"] = bool(standalone)
+out["engine_bits_scale"] = bool(rB.shuffle_bits == 3 * r1.shuffle_bits)
+print(json.dumps(out))
+"""
+
+
+def test_fused_batched_exchange_parity_on_8_host_devices():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT_FUSED],
+                          capture_output=True, text=True, timeout=900,
+                          env={"PYTHONPATH": "src",
+                               "PATH": "/usr/bin:/bin",
+                               "HOME": os.environ.get("HOME", "/tmp"),
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert res["words_bitwise"]
+    assert res["bits_scale"]
+    assert res["per_column_bitwise"]
+    assert res["engine_batched_bitwise"]
+    assert res["engine_columns_standalone"]
+    assert res["engine_bits_scale"]

@@ -94,3 +94,70 @@ def test_sssp_matches_dijkstra():
     alloc = er_allocation(n, 4, 2)
     res = engine.run(algo.sssp(0), g, alloc, g.n, mode="coded-fast")
     np.testing.assert_allclose(res.state, dist.astype(np.float32), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# CompiledEngine session API (engine.compile) and backend_opts validation
+# ---------------------------------------------------------------------------
+
+def test_compile_run_equals_one_shot_run():
+    n = divisible_n(60, 4, 2)
+    g = gm.erdos_renyi(n, 0.15, seed=2)
+    alloc = er_allocation(n, 4, 2)
+    for mode in ("uncoded", "coded", "coded-fast", "coded-ref", "single"):
+        sess = engine.compile(algo.pagerank(), g, alloc, mode)
+        res = sess.run(3)
+        ref = engine.run(algo.pagerank(), g, alloc, 3, mode)
+        assert np.array_equal(res.state, ref.state), mode
+        assert res.shuffle_bits == ref.shuffle_bits, mode
+
+
+def test_compiled_engine_reuses_plan_across_runs_and_programs():
+    n = divisible_n(60, 4, 2)
+    g = gm.erdos_renyi(n, 0.15, seed=2)
+    alloc = er_allocation(n, 4, 2)
+    sess = engine.compile(algo.pagerank(), g, alloc, "coded")
+    plan = sess.plan
+    r1, r2 = sess.run(2), sess.run(2)
+    assert sess.plan is plan                    # no recompile between runs
+    assert np.array_equal(r1.state, r2.state)
+    other = sess.with_program(algo.sssp(0))
+    assert other.plan is plan                   # program swap is free
+    assert other.tables is sess.tables
+    assert np.array_equal(
+        other.run(4).state,
+        engine.run(algo.sssp(0), g, alloc, 4, "coded").state)
+
+
+def test_compiled_engine_loads_match_result_loads():
+    n = divisible_n(60, 4, 2)
+    g = gm.erdos_renyi(n, 0.15, seed=2)
+    alloc = er_allocation(n, 4, 2)
+    sess = engine.compile(algo.pagerank(), g, alloc, "coded")
+    loads = sess.loads()
+    res = sess.run(1)
+    assert res.normalized_load == pytest.approx(
+        loads["coded"] + loads["coded_leftover_unicast"])
+
+
+def test_backend_opts_unknown_keys_raise_with_accepted_set():
+    n = divisible_n(40, 4, 2)
+    g = gm.erdos_renyi(n, 0.2, seed=1)
+    alloc = er_allocation(n, 4, 2)
+    prog = algo.pagerank()
+    # numpy accepts nothing: the old silent-ignore bug must now raise.
+    with pytest.raises(ValueError, match=r"'numpy' got unknown option.*bm"):
+        engine.run(prog, g, alloc, 1, backend_opts={"bm": 8})
+    with pytest.raises(ValueError, match=r"accepted: \['bm', 'interpret'\]"):
+        engine.run(prog, g, alloc, 1, backend="spmv",
+                   backend_opts={"mesh": None})
+    with pytest.raises(ValueError,
+                       match=r"accepted: \['encode', 'interpret', 'mesh'\]"):
+        engine.compile(prog, g, alloc, "coded", backend="fused", bm=8)
+    with pytest.raises(ValueError, match="unknown backend"):
+        engine.run(prog, g, alloc, 1, backend="cuda")
+    # Valid options still pass through (inline form == backend_opts form).
+    a = engine.compile(prog, g, alloc, "coded", backend="spmv", bm=32).run(2)
+    b = engine.run(prog, g, alloc, 2, backend="spmv",
+                   backend_opts={"bm": 32})
+    assert np.array_equal(a.state, b.state)

@@ -1,0 +1,112 @@
+"""Admission-batched serving: coalescing, exactness, and amortization.
+
+`GraphService` must (a) return per-query results identical to standalone
+engine runs (bitwise for SSSP - min reductions), (b) actually coalesce
+concurrent queries into shared batched runs (fewer batches than queries,
+shuffle bits = schedule bits x total payload columns), and (c) validate
+inputs and refuse work after close.
+"""
+import numpy as np
+import pytest
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core.allocation import divisible_n, er_allocation
+from repro.serve import GraphService
+
+
+def _case(n=48, K=4, r=2, p=0.2, seed=11):
+    n = divisible_n(n, K, r)
+    return graphs.erdos_renyi(n, p, seed=seed), er_allocation(n, K, r)
+
+
+def test_sssp_queries_match_standalone_bitwise():
+    g, alloc = _case()
+    roots = [0, 3, 7, 11, 19, 23]
+    with GraphService(g, alloc, max_batch=3, max_wait_s=0.05) as svc:
+        futs = [svc.submit("sssp", s, iters=6) for s in roots]
+        results = [f.result(timeout=60) for f in futs]
+    for s, d in zip(roots, results):
+        ref = engine.compile(algo.sssp(s), g, alloc, "coded").run(6)
+        assert np.array_equal(d, ref.state), s
+    assert svc.stats.queries == len(roots)
+
+
+def test_ppr_queries_match_standalone():
+    g, alloc = _case()
+    rng = np.random.default_rng(4)
+    prefs = rng.random((3, g.n)).astype(np.float32)
+    prefs /= prefs.sum(axis=1, keepdims=True)
+    with GraphService(g, alloc, max_batch=3, max_wait_s=0.05) as svc:
+        futs = [svc.submit("ppr", p, iters=5) for p in prefs]
+        results = [f.result(timeout=60) for f in futs]
+    for p, v in zip(prefs, results):
+        ref = engine.compile(algo.personalized_pagerank(p),
+                             g, alloc, "coded").run(5)
+        np.testing.assert_allclose(v, ref.state[:, 0], rtol=1e-6, atol=1e-9)
+
+
+def test_full_batches_amortize_one_shuffle_run():
+    g, alloc = _case()
+    B = 4
+    # Generous admission window + exactly-full batches => deterministic
+    # coalescing: the worker admits each batch the moment it fills.
+    with GraphService(g, alloc, max_batch=B, max_wait_s=5.0) as svc:
+        futs = [svc.submit("sssp", s, iters=4) for s in range(2 * B)]
+        for f in futs:
+            f.result(timeout=120)
+    assert svc.stats.queries == 2 * B
+    assert svc.stats.batches == 2
+    assert svc.stats.mean_batch == B
+    single = engine.compile(algo.sssp(0), g, alloc, "coded").run(4)
+    # Bits scale with payload columns only: schedule paid once per batch.
+    assert svc.stats.shuffle_bits == 2 * B * single.shuffle_bits
+    assert svc.stats.bits_per_query == single.shuffle_bits
+
+
+def test_lanes_keep_kinds_and_iter_counts_separate():
+    g, alloc = _case()
+    with GraphService(g, alloc, max_batch=8, max_wait_s=0.02) as svc:
+        f_sssp = svc.submit("sssp", 1, iters=3)
+        f_ppr = svc.submit("ppr", algo.uniform_prefs(g.n)[:, 0], iters=3)
+        f_long = svc.submit("sssp", 1, iters=5)
+        a, b, c = (f.result(timeout=60) for f in (f_sssp, f_ppr, f_long))
+    assert np.array_equal(
+        a, engine.compile(algo.sssp(1), g, alloc, "coded").run(3).state)
+    assert np.array_equal(
+        c, engine.compile(algo.sssp(1), g, alloc, "coded").run(5).state)
+    assert b.shape == (g.n,)
+    assert svc.stats.batches == 3      # three (kind, iters) lanes
+
+
+def test_validation_and_lifecycle():
+    g, alloc = _case()
+    svc = GraphService(g, alloc, max_batch=2, max_wait_s=0.01)
+    try:
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit("sssp", g.n)
+        with pytest.raises(ValueError, match=rf"n={g.n}"):
+            svc.submit("ppr", np.ones(3, dtype=np.float32))
+        with pytest.raises(ValueError, match="unknown query kind"):
+            svc.submit("bfs", 0)
+        assert set(svc.loads()) == {"uncoded", "coded",
+                                    "coded_leftover_unicast", "gain"}
+    finally:
+        svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit("sssp", 0)
+    with pytest.raises(ValueError, match="max_batch"):
+        GraphService(g, alloc, max_batch=0)
+
+
+def test_close_drains_pending_queries():
+    g, alloc = _case()
+    svc = GraphService(g, alloc, max_batch=4, max_wait_s=10.0)
+    # A partial batch sits in its admission window; close() must flush it
+    # rather than drop the futures.
+    futs = [svc.submit("sssp", s, iters=3) for s in (0, 1)]
+    svc.close()
+    for s, f in zip((0, 1), futs):
+        ref = engine.compile(algo.sssp(s), g, alloc, "coded").run(3)
+        assert np.array_equal(f.result(timeout=5), ref.state)
