@@ -96,6 +96,7 @@ class EngineResult:
     iters: int
     shuffle_bits: int            # total over all iterations
     mode: str
+    faults: "object | None" = None   # faults.FaultLog when a schedule ran
 
     @property
     def batch(self) -> int:
@@ -278,6 +279,7 @@ class CompiledEngine:
                        if sparse and self.distributed and mode in PLAN_MODES
                        else None)
         self._fused = None
+        self.recovery = None                  # faults.RepairStats after fail()
 
     @property
     def fused(self):
@@ -301,6 +303,71 @@ class CompiledEngine:
                              plan=self.plan, backend_opts=self.backend_opts)
         eng._fused = self._fused
         return eng
+
+    def fail(self, servers) -> "CompiledEngine":
+        """Degrade this session after `servers` crash; returns the survivors'.
+
+        Coded modes repair the compiled schedule in place of recompiling
+        (`ShufflePlan.repair`: dead senders' columns handed to healthy group
+        members, bitwise-equal delivered words), so post-failure iterations
+        keep the coded gain; uncoded recompiles the missing set on the
+        degraded allocation. Always call on the *original* session with the
+        cumulative failed set - `fail((0,)).fail((0, 1))` is not supported,
+        `fail((0, 1))` is. The returned session's `.recovery` holds the
+        `RepairStats` (hand-over bits, demotions, re-Mapped vertices); its
+        per-iteration `run` bits include the hand-over overhead.
+        """
+        from .faults import RepairStats, degrade_allocation
+
+        if not self.distributed or self.mode not in PLAN_MODES:
+            raise ValueError(
+                "fail() needs a distributed plan-mode session "
+                f"(uncoded/coded/coded-fast; got mode={self.mode!r})")
+        failed = tuple(sorted({int(s) for s in np.atleast_1d(servers)}))
+        bad = [s for s in failed if not 0 <= s < self.alloc.K]
+        if bad:
+            raise ValueError(f"failed servers {bad} out of range 0..{self.alloc.K - 1}")
+        if self.mode == "uncoded":
+            degraded, dstats = degrade_allocation(self.alloc, failed)
+            plan = compile_plan_csr(self.g.csr, degraded, schedule=False)
+            rstats = RepairStats(failed, dstats.remapped_vertices, 0, 0)
+        else:
+            plan, degraded, rstats = self.plan.repair(self.g.csr, self.alloc,
+                                                      failed)
+        eng = CompiledEngine(self.program, self.g, degraded, self.mode,
+                             path=self.path, backend=self.backend, plan=plan,
+                             backend_opts=self.backend_opts)
+        eng.recovery = rstats
+        return eng
+
+    def _apply_events(self, cur: "CompiledEngine", events,
+                      failed: set, straggling: set, log) -> tuple["CompiledEngine", bool]:
+        """Fold one boundary's fault events into the (failed, straggling)
+        sets; returns (current session, whether a new crash landed)."""
+        crashed = changed = False
+        for ev in events:
+            if ev.kind == "crash":
+                new = set(ev.servers) - failed
+                if new:
+                    failed |= new
+                    straggling -= new
+                    changed = crashed = True
+                    log.crashes += 1
+            elif ev.kind == "recover":
+                if set(ev.servers) & failed:
+                    failed.difference_update(ev.servers)
+                    changed = True
+                    log.recoveries += 1
+                straggling.difference_update(ev.servers)
+            else:                                       # "straggle"
+                straggling |= set(ev.servers) - failed
+            log.applied += (ev,)
+        if changed:
+            cur = self if not failed else self.fail(tuple(sorted(failed)))
+            if cur.recovery is not None:
+                log.demoted_pairs = cur.recovery.demoted_pairs
+                log.remapped_vertices = cur.recovery.remapped_vertices
+        return cur, crashed
 
     def _step(self, state: np.ndarray) -> tuple[np.ndarray, int]:
         """One Map -> Shuffle -> Reduce round; returns (state', bits_sent)."""
@@ -343,15 +410,68 @@ class CompiledEngine:
                                        state), bits
         raise ValueError(f"unknown mode {self.mode!r}")
 
-    def run(self, iters: int, state: np.ndarray | None = None) -> EngineResult:
-        """Execute `iters` rounds from `program.init` (or a given state)."""
+    def run(self, iters: int, state: np.ndarray | None = None, *,
+            start_iter: int = 0, start_bits: int = 0,
+            checkpoint=None, checkpoint_every: int = 1,
+            fault_schedule=None) -> EngineResult:
+        """Execute `iters` rounds from `program.init` (or a given state).
+
+        `start_iter`/`start_bits` resume a checkpointed run: iteration
+        indices continue from `start_iter` (fault-schedule boundaries and
+        checkpoint epochs line up with the uninterrupted run) and the
+        returned `shuffle_bits` is cumulative from `start_bits`.
+
+        `checkpoint` (a `core.checkpoint.SessionCheckpointer`) persists
+        (iteration, state, cumulative bits, current allocation) every
+        `checkpoint_every` iterations and always after the final one;
+        saves are atomic and run on a background thread, so a crash
+        mid-save never corrupts the newest complete epoch.
+
+        `fault_schedule` (a `faults.FaultSchedule`) applies crash /
+        straggle / recover events at iteration boundaries: crashes swap in
+        the repaired coded session (`fail`), recovers swap the original
+        back, stragglers re-price the Shuffle per the hand-over rule
+        (values are unaffected). The result's `.faults` is the `FaultLog`.
+        """
         state = (self.program.init(self.g) if state is None
                  else np.asarray(state, dtype=np.float32))
-        total_bits = 0
-        for _ in range(iters):
-            state, bits = self._step(state)
+        total_bits = start_bits
+        cur, log = self, None
+        failed: set[int] = set()
+        straggling: set[int] = set()
+        crash_pending = False
+        if fault_schedule is not None:
+            from .faults import FaultLog
+            log = FaultLog()
+        for it in range(start_iter, start_iter + iters):
+            if fault_schedule is not None:
+                cur, crashed = self._apply_events(
+                    cur, fault_schedule.at(it), failed, straggling, log)
+                crash_pending |= crashed
+            state, bits = cur._step(state)
+            B = 1 if state.ndim == 1 else state.shape[1]
+            if straggling and cur.mode in ("coded", "coded-fast"):
+                from .faults import _straggler_bits_plan
+                bits = _straggler_bits_plan(
+                    cur.plan, tuple(sorted(straggling))) * B
+                if cur.mode == "coded":
+                    bits += cur.plan.leftover_bits * B
+            if log is not None and straggling:
+                log.straggled_iters += 1
+            if cur.recovery is not None:
+                bits += cur.recovery.handover_bits * B
+                if log is not None:
+                    log.handover_bits += cur.recovery.handover_bits * B
+            if crash_pending:
+                log.recovery_bits += bits
+                crash_pending = False
             total_bits += bits
-        return EngineResult(state, iters, total_bits, self.mode)
+            if checkpoint is not None and (
+                    (it + 1 - start_iter) % max(checkpoint_every, 1) == 0
+                    or it == start_iter + iters - 1):
+                checkpoint.save(it + 1, state, total_bits, cur.alloc)
+        return EngineResult(state, start_iter + iters, total_bits, self.mode,
+                            faults=log)
 
     def run_batch(self, states, iters: int) -> EngineResult:
         """Run B queries on ONE Shuffle exchange per iteration.
@@ -421,6 +541,40 @@ def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
     """
     return compile(program, g, alloc, mode, path=path, backend=backend,
                    plan=plan, backend_opts=backend_opts).run(iters)
+
+
+def restore(directory, program: VertexProgram, g: Graph, *,
+            K: int | None = None, mode: str = "coded", path: str = "auto",
+            backend: str = "numpy", backend_opts: dict | None = None,
+            epoch: int | None = None):
+    """Rebuild a session from the newest complete checkpoint under
+    `directory`; returns `(CompiledEngine, SessionCheckpoint)`.
+
+    The checkpoint carries the exact allocation (fingerprint-verified), so
+    the default restore recompiles the *same* schedule and
+    ``eng.run(remaining, state=ckpt.state, start_iter=ckpt.iteration,
+    start_bits=ckpt.shuffle_bits)`` resumes bitwise-identically to the
+    uninterrupted run (the sparse Reduce gathers in canonical CSR entry
+    order, so even float-sum programs are insensitive to the allocation).
+    Pass `K` != the checkpointed K for an *elastic* restore: the allocation
+    is re-derived via `faults.rebalance` and a fresh plan compiled - state
+    still resumes bitwise-identically, only the schedule (bits) changes.
+    `epoch` pins a specific checkpoint instead of the newest.
+    """
+    from .checkpoint import load_checkpoint
+
+    ckpt = load_checkpoint(directory, epoch=epoch)
+    if ckpt.state.shape[0] != g.n:
+        raise ValueError(
+            f"checkpoint state has n={ckpt.state.shape[0]} but graph has "
+            f"n={g.n}")
+    alloc = ckpt.alloc
+    if K is not None and alloc is not None and K != alloc.K:
+        from .faults import rebalance
+        alloc = rebalance(alloc, K)
+    eng = compile(program, g, alloc, mode, path=path, backend=backend,
+                  backend_opts=backend_opts)
+    return eng, ckpt
 
 
 def _unicast_leftovers(g: Graph, alloc: Allocation, values: np.ndarray,

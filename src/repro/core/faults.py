@@ -3,31 +3,145 @@
 The coded allocation stores every vertex at r servers, so the loss of up to
 r-1 servers destroys no Map shard. On failure of server f:
   * f's Reduce partition R_f is re-assigned round-robin to survivors,
-  * survivors fetch the values the new owners are missing (uncoded unicast;
-    coded groups that contained f are degraded for exactly f's segments),
-  * if r == 1, batches uniquely Mapped at f are *re-Mapped* by survivors
-    (counted as recovery compute, not shuffle bits).
+  * the compiled coded schedule is *repaired*, not abandoned:
+    `ShufflePlan.repair` splices the surviving deliveries with the orphaned
+    rows' recomputed needs and hands dead senders' columns to healthy group
+    members (the straggler hand-over rule), so post-failure iterations keep
+    the paper's inverse-linear coded gain,
+  * if r <= |failed|, batches uniquely Mapped at the dead set are *re-Mapped*
+    by survivors (counted as recovery compute, not shuffle bits) and pairs
+    whose (r+1)-group keeps < 2 healthy members are demoted to unicast.
 
-`run_with_failure` executes this end-to-end and must match the oracle exactly.
+`run_with_failure` executes this end-to-end and must match the oracle
+exactly; `FaultSchedule` scripts deterministic crash / straggle / recover
+events at iteration boundaries for chaos tests (`CompiledEngine.run` and
+`serve.GraphService` both drive it).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from .algorithms import VertexProgram
 from .allocation import Allocation
 from .bitcodec import T_BITS
-from .engine import EngineResult, _reduce_distributed
+from .engine import EngineResult
 from .graph_models import Graph
 
 
 @dataclasses.dataclass(frozen=True)
 class RecoveryStats:
     failed: tuple[int, ...]
-    remapped_vertices: int         # Map work repeated by survivors (r==1 only)
+    remapped_vertices: int         # Map work repeated by survivors (r <= |failed| only)
     recovery_bits: int             # extra shuffle bits for recovery
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairStats:
+    """What one `ShufflePlan.repair` cost beyond the degraded schedule."""
+
+    failed: tuple[int, ...]
+    remapped_vertices: int         # vertices re-Mapped by survivors
+    handover_bits: int             # per-Shuffle unicast overhead of stand-ins
+    demoted_pairs: int             # coded pairs demoted to unicast leftovers
+
+
+FAULT_KINDS = ("crash", "straggle", "recover")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted event applied at iteration boundary `at` (before the
+    iteration with that index runs)."""
+
+    at: int
+    kind: str                      # "crash" | "straggle" | "recover"
+    servers: tuple[int, ...]
+
+
+class FaultSchedule:
+    """Deterministic fault-injection script for chaos tests.
+
+    Events fire at iteration boundaries (batch boundaries in the serving
+    queue): "crash" removes servers permanently until a "recover" names
+    them; "straggle" keeps servers alive but hands their coded columns over
+    per the straggler rule (bit accounting only - delivered values are
+    unchanged); "recover" clears both states for the named servers, after
+    which execution returns to the original compiled schedule. The whole
+    script is plain data, so a seeded `FaultSchedule.random` run is exactly
+    reproducible.
+    """
+
+    def __init__(self, events):
+        evs = []
+        for ev in events:
+            if not isinstance(ev, FaultEvent):
+                at, kind, servers = ev
+                ev = FaultEvent(int(at), str(kind),
+                                tuple(int(s) for s in np.atleast_1d(servers)))
+            if ev.kind not in FAULT_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {ev.kind!r}; accepted: {FAULT_KINDS}")
+            if ev.at < 0:
+                raise ValueError(f"event boundary {ev.at} must be >= 0")
+            evs.append(dataclasses.replace(
+                ev, servers=tuple(sorted(set(ev.servers)))))
+        self.events = tuple(sorted(
+            evs, key=lambda e: (e.at, FAULT_KINDS.index(e.kind), e.servers)))
+
+    def at(self, boundary: int) -> list[FaultEvent]:
+        return [ev for ev in self.events if ev.at == boundary]
+
+    @property
+    def horizon(self) -> int:
+        """Last boundary with an event (-1 for an empty schedule)."""
+        return max((ev.at for ev in self.events), default=-1)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __repr__(self) -> str:
+        return f"FaultSchedule({list(self.events)!r})"
+
+    @classmethod
+    def random(cls, K: int, iters: int, seed: int = 0, *,
+               max_failed: int = 1, p_crash: float = 0.3,
+               p_recover: float = 0.3) -> "FaultSchedule":
+        """Seeded chaos: random crash/recover walk bounded by `max_failed`.
+
+        Keep `max_failed < r` to stay inside the repair regime where no
+        re-Map is needed and every group keeps >= 2 healthy members.
+        """
+        rng = np.random.default_rng(seed)
+        failed: set[int] = set()
+        events: list[FaultEvent] = []
+        for it in range(iters):
+            if failed and rng.random() < p_recover:
+                s = sorted(failed)[int(rng.integers(len(failed)))]
+                failed.discard(s)
+                events.append(FaultEvent(it, "recover", (s,)))
+            if len(failed) < max_failed and rng.random() < p_crash:
+                alive = [k for k in range(K) if k not in failed]
+                s = alive[int(rng.integers(len(alive)))]
+                failed.add(s)
+                events.append(FaultEvent(it, "crash", (s,)))
+        return cls(events)
+
+
+@dataclasses.dataclass
+class FaultLog:
+    """What a fault-injected run actually did (see `EngineResult.faults`)."""
+
+    applied: tuple[FaultEvent, ...] = ()
+    crashes: int = 0               # crash events applied
+    recoveries: int = 0            # recover events applied
+    straggled_iters: int = 0       # iterations run under >= 1 straggler
+    handover_bits: int = 0         # cumulative stand-in unicast overhead
+    demoted_pairs: int = 0         # pairs demoted at the deepest degradation
+    remapped_vertices: int = 0     # vertices re-Mapped at the deepest degradation
+    recovery_bits: int = 0         # bits of the first shuffle after each crash
 
 
 def degrade_allocation(alloc: Allocation, failed: tuple[int, ...]) -> tuple[Allocation, RecoveryStats]:
@@ -52,53 +166,32 @@ def degrade_allocation(alloc: Allocation, failed: tuple[int, ...]) -> tuple[Allo
 
 def run_with_failure(program: VertexProgram, g: Graph, alloc: Allocation,
                      iters: int, failed: tuple[int, ...],
-                     fail_at_iter: int = 0) -> tuple[EngineResult, RecoveryStats]:
+                     fail_at_iter: int = 0,
+                     mode: str = "coded") -> tuple[EngineResult, RecoveryStats]:
     """Run iterations; servers in `failed` die at `fail_at_iter` (post-Map).
 
-    Iterations before the failure use the coded schedule; after the failure
-    the degraded allocation shuffles uncoded (a real deployment would rebuild
-    the coded schedule for K' = K - |failed| at the next checkpoint; see
-    rebalance()).
+    Iterations before the failure run the compiled schedule of `mode`;
+    at the failure boundary the session repairs itself
+    (`CompiledEngine.fail` -> `ShufflePlan.repair`), so post-failure epochs
+    *keep the coded gain* instead of degrading to unicast - `mode="uncoded"`
+    reproduces the legacy all-unicast fallback for A/B comparison.
 
-    Programs with an edge-value form run the O(edges) sparse path (one
-    missing-set plan compiled per allocation epoch); others fall back to the
-    dense dict-delivery reference. Bit accounting is identical either way.
+    Programs with an edge-value form ride the O(edges) sparse path; others
+    fall back to the dense plan executors. Bit accounting is identical
+    either way (schedule-only). `stats.recovery_bits` is the first
+    post-failure Shuffle's bits.
     """
-    from .engine import _reduce_sparse
-    from .shuffle_plan import compile_plan_csr
-    from .uncoded_shuffle import run_uncoded
+    from . import engine
 
-    state = program.init(g)
-    total_bits = 0
-    degraded, stats = degrade_allocation(alloc, failed)
-    recovery_bits = 0
-    sparse = program.supports_sparse
-    if sparse:
-        # Compile only the epochs that actually run, adjacency-free off the
-        # CSR view (fail_at_iter=0 never uses the pre plan).
-        plan_pre = (compile_plan_csr(g.csr, alloc, schedule=False)
-                    if fail_at_iter > 0 else None)
-        plan_post = (compile_plan_csr(g.csr, degraded, schedule=False)
-                     if fail_at_iter < iters else None)
-    for it in range(iters):
-        alloc_now = alloc if it < fail_at_iter else degraded
-        if sparse:
-            plan_now = plan_pre if it < fail_at_iter else plan_post
-            tables = plan_now.edge_tables(g.csr, alloc_now)
-            edge_vals = program.map_edge_values(g, state).astype(np.float32)
-            res = plan_now.execute_uncoded_sparse(edge_vals, tables)
-            state = _reduce_sparse(program, g, edge_vals, res, tables.gather,
-                                   state)
-        else:
-            values = program.map_values(g, state).astype(np.float32)
-            res = run_uncoded(g.adj, values, alloc_now)
-            state = _reduce_distributed(program, g, alloc_now, values,
-                                        res.delivered, state)
-        if it == fail_at_iter:
-            recovery_bits = res.bits_sent  # first post-failure shuffle = recovery
-        total_bits += res.bits_sent
-    result = EngineResult(state, iters, total_bits, f"failover-{len(failed)}")
-    return result, dataclasses.replace(stats, recovery_bits=recovery_bits)
+    failed = tuple(sorted({int(f) for f in failed}))
+    sched = FaultSchedule([FaultEvent(int(fail_at_iter), "crash", failed)])
+    res = engine.compile(program, g, alloc, mode).run(
+        iters, fault_schedule=sched)
+    log = res.faults
+    stats = RecoveryStats(failed, log.remapped_vertices, log.recovery_bits)
+    result = EngineResult(res.state, iters, res.shuffle_bits,
+                          f"failover-{len(failed)}")
+    return result, stats
 
 
 def straggler_coded_load(graph, alloc: Allocation,
@@ -118,7 +211,8 @@ def straggler_coded_load(graph, alloc: Allocation,
     after one O(edges) CSR compile, so straggler accounting works past
     `dense_limit`. A dense [n, n] adjacency still runs the legacy
     subset-enumeration reference below (exactly equal by construction: the
-    plan path only replaces the per-group |Z^k| counts).
+    plan path only replaces the per-group |Z^k| counts), with a
+    DeprecationWarning mirroring `loads.empirical_loads`.
     """
     import itertools
 
@@ -134,6 +228,10 @@ def straggler_coded_load(graph, alloc: Allocation,
         csr = graph.csr if isinstance(graph, Graph) else graph
         return straggler_coded_load_plan(
             compile_plan_csr(csr, alloc, validate=False), stragglers)
+    warnings.warn(
+        "straggler_coded_load(adj, alloc, ...) with a dense adjacency is "
+        "deprecated: pass the Graph (or its .csr, or a compiled plan) so "
+        "the accounting stays O(edges)", DeprecationWarning, stacklevel=2)
     adj = graph
     K, r = alloc.K, alloc.r
     bounds = segment_bounds(r)
@@ -174,19 +272,13 @@ def _group_straggler_bits(S: tuple[int, ...], sizes: dict[int, int],
     return bits
 
 
-def straggler_coded_load_plan(plan, stragglers: tuple[int, ...]) -> float:
-    """`straggler_coded_load` read off a compiled scheduled `ShufflePlan`.
-
-    The dense reference only consumes the per-(group, receiver) needed-value
-    counts |Z^k_{S\\{k}}|; those are run lengths of the plan's covered-pair
-    table (each pair's group is the bitmask of its segment-0 column), so the
-    whole accounting is one O(P) pass plus the same C(K, r+1) group loop -
-    no adjacency, hence no dense_limit ceiling. Exactly equal to the dense
-    reference on the same realization.
-    """
+def _straggler_bits_plan(plan, stragglers: tuple[int, ...]) -> int:
+    """Raw group bits of one coded Shuffle under `stragglers`, read off a
+    compiled scheduled plan (excludes the unicast leftovers, like the dense
+    reference; `straggler_coded_load_plan` normalizes it)."""
     import itertools
 
-    from .bitcodec import T_BITS, segment_bounds
+    from .bitcodec import segment_bounds
     from .shuffle_plan import ShufflePlan
 
     assert isinstance(plan, ShufflePlan)
@@ -210,20 +302,41 @@ def straggler_coded_load_plan(plan, stragglers: tuple[int, ...]) -> float:
         group_sizes = {k: sizes.get((mask, k), 0) for k in S}
         total_bits += _group_straggler_bits(S, group_sizes, stragglers, r,
                                             bounds)
-    return total_bits / (plan.n * plan.n * T_BITS)
+    return total_bits
 
 
-def rebalance(alloc: Allocation, K_new: int) -> Allocation:
+def straggler_coded_load_plan(plan, stragglers: tuple[int, ...]) -> float:
+    """`straggler_coded_load` read off a compiled scheduled `ShufflePlan`.
+
+    The dense reference only consumes the per-(group, receiver) needed-value
+    counts |Z^k_{S\\{k}}|; those are run lengths of the plan's covered-pair
+    table (each pair's group is the bitmask of its segment-0 column), so the
+    whole accounting is one O(P) pass plus the same C(K, r+1) group loop -
+    no adjacency, hence no dense_limit ceiling. Exactly equal to the dense
+    reference on the same realization.
+    """
+    return _straggler_bits_plan(plan, stragglers) \
+        / (plan.n * plan.n * T_BITS)
+
+
+def rebalance(alloc: Allocation, K_new: int, *, pad: bool = False) -> Allocation:
     """Elastic re-allocation onto K_new servers (same n, same r if feasible).
 
     Deterministic: allocation depends only on (n, K, r), so scale-up/down is a
     pure re-partition - checkpointed vertex state carries over unchanged.
+
+    If n is not divisible by the new (K, C(K, r)) the strict default raises;
+    `pad=True` routes through `er_allocation(pad=True)` instead (mirroring
+    `graphs.allocate`): the returned allocation has
+    ``alloc.n == divisible_n(n, K_new, r)`` and the graph must be padded to
+    match with virtual isolated vertices (``Graph.padded(alloc.n)``).
     """
     from .allocation import divisible_n, er_allocation
 
     r = min(alloc.r, K_new)
     n2 = divisible_n(alloc.n, K_new, r)
-    if n2 != alloc.n:
+    if n2 != alloc.n and not pad:
         raise ValueError(
-            f"n={alloc.n} not compatible with K={K_new}, r={r}; pad to {n2}")
-    return er_allocation(alloc.n, K_new, r)
+            f"n={alloc.n} not compatible with K={K_new}, r={r}; pad to {n2} "
+            f"(or pass pad=True)")
+    return er_allocation(alloc.n, K_new, r, pad=pad)

@@ -396,6 +396,94 @@ class ShufflePlan:
             return self.execute_uncoded_sparse(edge_vals, tables)
         raise ValueError(f"unknown plan mode {mode!r}")
 
+    # ---- coded degraded-mode repair ----
+
+    def repair(self, csr: CSR, alloc: Allocation, failed):
+        """Survivors' coded schedule after `failed` servers die, by patching.
+
+        Returns ``(plan, degraded_alloc, stats)`` where `plan` is the coded
+        schedule of the degraded allocation (`faults.degrade_allocation`) and
+        `stats` is a `faults.RepairStats`. Instead of recompiling over all
+        edges, the repair splices two streams into `_compile_missing`:
+
+          * kept entries - the original plan's deliveries whose receiver
+            survived (minus any a recovery re-Map made locally available),
+          * orphan-row entries - the CSR rows of the failed servers' Reduce
+            partitions, recomputed against their new owners' Map sets,
+
+        which is O(plan + edges in failed rows), and then patches the column
+        sender table: a column whose sender died is handed to the
+        lexicographically-first healthy member s' of its (r+1)-group (s'
+        Mapped every batch in the column except its own receiver's, so it can
+        re-encode the same bits; the s'-destined segments it cannot XOR are
+        unicast by a third healthy member and accounted as
+        `stats.handover_bits`). Pairs whose group keeps < 2 healthy members
+        (possible only when |failed| >= r) are demoted to unicast leftovers.
+
+        Contract (locked by `tests/test_faults.py`): for |failed| < r the
+        repaired plan is schedule-equal to a fresh `compile_plan_csr` on the
+        degraded allocation - identical arrays except `col_sender`, which
+        fresh compilation would still point at dead servers - and its
+        executors deliver bitwise-identical words. Composition works too:
+        repairing an already-degraded (plan, alloc) treats every server with
+        an empty Map row as dead when choosing stand-ins.
+        """
+        from .faults import RepairStats, degrade_allocation
+
+        self._require_schedule()
+        self.check_alloc(alloc)
+        if csr.n != self.n:
+            raise ValueError(
+                f"CSR has n={csr.n}, plan was compiled for n={self.n}")
+        failed = tuple(sorted({int(f) for f in failed}))
+        if any(not 0 <= f < self.K for f in failed):
+            raise ValueError(f"failed servers {failed} out of range "
+                             f"[0, {self.K})")
+        degraded, dstats = degrade_allocation(alloc, failed)
+
+        # Kept deliveries: surviving receivers, minus entries a recovery
+        # re-Map (|failed| >= r only) just made locally available.
+        keep = ~np.isin(self.all_k, failed)
+        keep &= ~degraded.map_sets[self.all_k, self.all_j]
+        kk, ii, jj = self.all_k[keep], self.all_i[keep], self.all_j[keep]
+
+        # Orphan rows (Reduce partitions of the dead): recompute their
+        # missing entries against the new owners' Map sets from the CSR.
+        orows = np.flatnonzero(np.isin(alloc.reduce_owner, failed))
+        if orows.size:
+            starts = csr.indptr[orows]
+            counts = csr.indptr[orows + 1] - starts
+            total = int(counts.sum())
+            offs = np.zeros(orows.size, dtype=np.int64)
+            np.cumsum(counts[:-1], out=offs[1:])
+            e = np.arange(total, dtype=np.int64) \
+                + np.repeat(starts - offs, counts)
+            oi = np.repeat(orows, counts).astype(np.int32)
+            oj = csr.indices[e].astype(np.int32)
+            ok = degraded.reduce_owner[oi].astype(np.int32)
+            miss = ~degraded.map_sets[ok, oj]
+            kk = np.concatenate([kk, ok[miss]])
+            ii = np.concatenate([ii, oi[miss]])
+            jj = np.concatenate([jj, oj[miss]])
+
+        # Healthy = still holds its Map shard (handles repair-of-repaired:
+        # servers that died in an earlier epoch have all-False rows).
+        alive = degraded.map_sets.any(axis=1)
+        alive_mask = int(sum(1 << k for k in np.flatnonzero(alive)))
+        plan = _compile_missing(ii, jj, kk, degraded, True,
+                                survivors=alive_mask)
+        natural_left = int((np.array(
+            [len(s) for s in alloc.subsets])[alloc.batch_of[jj]]
+            != self.r).sum())
+        demoted = int(plan.left_k.size) - natural_left
+
+        handover_bits = _patch_senders(plan, np.uint64(alive_mask))
+        stats = RepairStats(failed=failed,
+                            remapped_vertices=dstats.remapped_vertices,
+                            handover_bits=handover_bits,
+                            demoted_pairs=demoted)
+        return plan, degraded, stats
+
 
 def _run_ranks(*keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Per-element run id and rank-within-run of already-sorted key arrays."""
@@ -464,17 +552,34 @@ def _compile_edges(ii: np.ndarray, jj: np.ndarray, alloc: Allocation,
     """Shared compiler body: one vectorized pass over the (row, col) edge
     streams, which both the dense and the CSR entry points supply in the
     same canonical order."""
+    # --- missing triples, edge-driven ---
+    kk = alloc.reduce_owner[ii].astype(np.int32)
+    miss = ~alloc.map_sets[kk, jj]
+    return _compile_missing(ii[miss].astype(np.int32),
+                            jj[miss].astype(np.int32), kk[miss],
+                            alloc, schedule)
+
+
+def _compile_missing(ii: np.ndarray, jj: np.ndarray, kk: np.ndarray,
+                     alloc: Allocation, schedule: bool,
+                     survivors: int | None = None) -> ShufflePlan:
+    """Build a plan from an explicit missing-triple stream (any order).
+
+    Everything downstream is lexsorted, so the output arrays depend only on
+    the *set* of (receiver, i, j) triples - which is what lets
+    `ShufflePlan.repair` splice kept entries and recomputed orphan-row
+    entries together and still land bitwise on the fresh-compile schedule.
+
+    `survivors` (a bitmask of servers still holding their Map shards)
+    demotes every covered pair whose (r+1)-group retains fewer than two
+    healthy members to a unicast leftover: with < 2 healthy senders the
+    straggler hand-over rule has nobody to stand in, so those pairs are
+    unrecoverable as coded multicast (only reachable when |failed| >= r).
+    """
     K, r, n = alloc.K, alloc.r, alloc.n
     if K > 64:
         raise NotImplementedError("group bitmasks require K <= 64")
     seg_shift, seg_mask = segment_words(r)
-
-    # --- missing triples, edge-driven ---
-    kk = alloc.reduce_owner[ii].astype(np.int32)
-    miss = ~alloc.map_sets[kk, jj]
-    ii = ii[miss].astype(np.int32)
-    jj = jj[miss].astype(np.int32)
-    kk = kk[miss]
     bb = alloc.batch_of[jj]
 
     if not schedule:                # missing-set-only plan (uncoded shuffle)
@@ -502,6 +607,10 @@ def _compile_edges(ii: np.ndarray, jj: np.ndarray, alloc: Allocation,
     subset_mask = np.array([sum(1 << s for s in S) for S in alloc.subsets],
                            dtype=np.uint64)
     covered = subset_size[bb] == r
+    gm = subset_mask[bb] | (np.uint64(1) << kk.astype(np.uint64))
+    if survivors is not None:
+        healthy = np.bitwise_count(gm & np.uint64(survivors))
+        covered &= healthy >= 2
 
     # Leftovers: no (r+1)-group exists for these; unicast (phase-III spill).
     lsel = ~covered
@@ -510,7 +619,6 @@ def _compile_edges(ii: np.ndarray, jj: np.ndarray, alloc: Allocation,
                               jj[lsel][lorder])
 
     # Covered pairs, sorted by (group, receiver, i, j) = legacy Z^k order.
-    gm = subset_mask[bb] | (np.uint64(1) << kk.astype(np.uint64))
     corder = np.lexsort((jj[covered], ii[covered], kk[covered], gm[covered]))
     pair_k = kk[covered][corder]
     pair_i = ii[covered][corder]
@@ -584,6 +692,37 @@ def _compile_edges(ii: np.ndarray, jj: np.ndarray, alloc: Allocation,
         left_k=left_k, left_i=left_i, left_j=left_j,
         all_k=all_k, all_i=all_i, all_j=all_j,
         pos_covered=inv[:P], pos_left=inv[P:], ptr=ptr)
+
+
+def _patch_senders(plan: ShufflePlan, alive_mask: np.uint64) -> int:
+    """Reassign dead senders' columns to healthy group members, in place.
+
+    Implements the `straggler_coded_load` hand-over rule at the column
+    level: the stand-in s' is the lowest healthy member of the column's
+    (r+1)-group; it re-encodes the same coded words (it Mapped every batch
+    in the column except its own receiver's), and the s'-destined segments
+    it cannot XOR are unicast by a third healthy member. Returns those
+    unicast overhead bits; the delivered words and the column widths (hence
+    `coded_bits`) are untouched. Columns only reach here with >= 2 healthy
+    members - `_compile_missing` demoted the rest to unicast leftovers.
+    """
+    if plan.col_sender.size == 0:
+        return 0
+    one = np.uint64(1)
+    dead = ((np.uint64(alive_mask) >> plan.col_sender.astype(np.uint64))
+            & one) == 0
+    if not dead.any():
+        return 0
+    healthy = plan.col_gm[dead] & np.uint64(alive_mask)
+    lsb = healthy & (np.uint64(0) - healthy)     # lowest healthy member
+    stand = np.bitwise_count(lsb - one).astype(np.int32)
+    # Overhead: the stand-in's own slot (if present) in each column it
+    # takes over must travel as unicast - it cannot XOR what it is owed.
+    slot_recv = np.append(plan.pair_k, np.int32(-1))[plan.slot_pair[dead]]
+    widths = np.bitwise_count(plan.slot_mask[dead])
+    bits = int(widths[slot_recv == stand[:, None]].sum())
+    plan.col_sender[dead] = stand
+    return bits
 
 
 def _validate(plan: ShufflePlan, adj: np.ndarray, alloc: Allocation) -> None:

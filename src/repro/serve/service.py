@@ -13,6 +13,26 @@ fullest lane first. Per admitted batch it builds the batched program
 stacked preference columns) and rebinds it on the session via
 `CompiledEngine.with_program` - no plan recompile, no re-jit of the fused
 exchange - then fans `state[:, b]` back to each caller's future.
+
+Hardening (failure semantics, locked by `tests/test_serve.py`):
+
+  * **per-query deadlines** - `submit(..., deadline_s=...)` queries that are
+    still queued when their deadline lapses fail with `TimeoutError` at
+    admission instead of riding (and paying for) the batch.
+  * **batch bisection** - a failing batch is split in half and each half
+    retried, recursively, so ONE poison query costs O(log B) extra runs and
+    fails only its own future; every batchmate still resolves.
+  * **fault injection** - a `faults.FaultSchedule` fires at admitted-batch
+    boundaries: crashes swap in the repaired coded session
+    (`CompiledEngine.fail` - still coded, no recompile-from-scratch),
+    recovers swap the original back, stragglers re-price the runs.
+  * **no stranded futures** - `close(wait=False)` cancels every queued
+    future (callers see `CancelledError`, not a hang) while the in-flight
+    batch still resolves; if the worker thread dies outside `_run_batch`,
+    the error fans out to every queued future.
+
+`ServeStats` counts all of it (failures, expiries, retries, crashes,
+recoveries) next to the throughput counters.
 """
 from __future__ import annotations
 
@@ -35,9 +55,14 @@ QUERY_KINDS = ("sssp", "ppr")
 @dataclasses.dataclass
 class ServeStats:
     """Counters over the service's lifetime (read them after `close`)."""
-    queries: int = 0
-    batches: int = 0
-    shuffle_bits: int = 0        # total over all batched runs
+    queries: int = 0             # queries resolved successfully
+    batches: int = 0             # successful batched runs (incl. retry halves)
+    shuffle_bits: int = 0        # total over all successful runs
+    failed_queries: int = 0      # futures failed with the query's own error
+    expired_queries: int = 0     # deadline lapsed while queued
+    retries: int = 0             # bisection re-runs after a batch failure
+    crashes: int = 0             # fault-schedule crash events applied
+    recoveries: int = 0          # fault-schedule recover events applied
 
     @property
     def mean_batch(self) -> float:
@@ -61,13 +86,16 @@ class GraphService:
     One background worker admits batches; `submit` is thread-safe and
     returns a `concurrent.futures.Future` resolving to that query's [n]
     result column. Query kinds: "sssp" (arg = root vertex id) and "ppr"
-    (arg = [n] preference vector).
+    (arg = [n] preference vector). `fault_schedule` injects deterministic
+    crash/straggle/recover events at admitted-batch boundaries (see module
+    docstring).
     """
 
     def __init__(self, g: Graph, alloc: Allocation, mode: str = "coded", *,
                  backend: str = "numpy", max_batch: int = 8,
                  max_wait_s: float = 0.005, plan: ShufflePlan | None = None,
-                 backend_opts: dict | None = None, **opts):
+                 backend_opts: dict | None = None, fault_schedule=None,
+                 **opts):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
         merged = dict(backend_opts or {})
@@ -81,8 +109,15 @@ class GraphService:
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self.stats = ServeStats()
+        self._fault_schedule = fault_schedule
+        self._fault_idx = 0
+        self._batch_no = 0                    # admitted-batch boundary clock
+        self._failed: set[int] = set()
+        self._straggling: set[int] = set()
+        self._active = self.session           # degraded session after crashes
         self._lanes: dict[tuple, collections.deque] = collections.defaultdict(
             collections.deque)
+        self._inflight: list[Future] = []
         self._cv = threading.Condition()
         self._closed = False
         self._worker = threading.Thread(
@@ -91,8 +126,15 @@ class GraphService:
 
     # -- client side -------------------------------------------------------
 
-    def submit(self, kind: str, arg, iters: int = 10) -> Future:
-        """Enqueue one query; returns a Future of its [n] result column."""
+    def submit(self, kind: str, arg, iters: int = 10,
+               deadline_s: float | None = None) -> Future:
+        """Enqueue one query; returns a Future of its [n] result column.
+
+        `deadline_s` bounds the time the query may sit in the queue: if it
+        has not been admitted into a batch within that many seconds, its
+        future fails with `TimeoutError` (counted in
+        `stats.expired_queries`) instead of riding a late batch.
+        """
         n = self.session.g.n
         if kind == "sssp":
             arg = int(arg)
@@ -106,11 +148,13 @@ class GraphService:
         else:
             raise ValueError(
                 f"unknown query kind {kind!r}; accepted: {QUERY_KINDS}")
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + float(deadline_s))
         fut: Future = Future()
         with self._cv:
             if self._closed:
                 raise RuntimeError("service is closed")
-            self._lanes[(kind, int(iters))].append((arg, fut))
+            self._lanes[(kind, int(iters))].append((arg, fut, deadline))
             self._cv.notify_all()
         return fut
 
@@ -119,12 +163,23 @@ class GraphService:
         return self.session.loads()
 
     def close(self, *, wait: bool = True) -> None:
-        """Stop admitting; drain already-queued queries, then stop."""
+        """Stop admitting. `wait=True` drains already-queued queries and
+        joins the worker; `wait=False` cancels every still-queued future
+        (callers get `CancelledError` immediately) while the in-flight
+        batch, if any, still resolves on the worker before it exits."""
+        if wait:
+            with self._cv:
+                self._closed = True
+                self._cv.notify_all()
+            self._worker.join()
+            return
         with self._cv:
             self._closed = True
+            pending = [f for q in self._lanes.values() for _, f, _ in q]
+            self._lanes.clear()
             self._cv.notify_all()
-        if wait:
-            self._worker.join()
+        for f in pending:
+            f.cancel()
 
     def __enter__(self) -> "GraphService":
         return self
@@ -135,12 +190,33 @@ class GraphService:
     # -- worker side -------------------------------------------------------
 
     def _loop(self) -> None:
+        try:
+            self._loop_inner()
+        except BaseException as e:
+            # The worker is the only resolver; dying silently would strand
+            # every queued caller on .result() forever. Fan the error out -
+            # to the admitted-but-unresolved batch as well as the queues.
+            with self._cv:
+                self._closed = True
+                pending = [f for q in self._lanes.values() for _, f, _ in q]
+                pending += self._inflight
+                self._lanes.clear()
+                self._inflight = []
+                self._cv.notify_all()
+            for f in pending:
+                if not f.done():
+                    f.set_exception(e)
+            raise
+
+    def _loop_inner(self) -> None:
         while True:
             with self._cv:
                 while not self._closed and not any(self._lanes.values()):
                     self._cv.wait()
-                if self._closed and not any(self._lanes.values()):
-                    return
+                if not any(self._lanes.values()):
+                    if self._closed:
+                        return
+                    continue                  # lanes cleared under us
                 lane = max(self._lanes, key=lambda k: len(self._lanes[k]))
                 # Admission window: hold the batch open until it is full,
                 # the timeout lapses, or the service is draining.
@@ -151,32 +227,112 @@ class GraphService:
                     if left <= 0:
                         break
                     self._cv.wait(timeout=left)
-                q = self._lanes[lane]
+                q = self._lanes.get(lane)
+                if q is None:                 # close(wait=False) raced us
+                    continue
                 batch = [q.popleft()
                          for _ in range(min(self.max_batch, len(q)))]
                 if not q:
                     del self._lanes[lane]
+                self._inflight = [f for _, f, _ in batch]
             if batch:
                 self._run_batch(lane, batch)
+            with self._cv:
+                self._inflight = []
+
+    def _apply_faults(self) -> None:
+        """Fire every not-yet-applied event at or before this boundary."""
+        sched = self._fault_schedule
+        if sched is None:
+            return
+        changed = False
+        while (self._fault_idx < len(sched.events)
+               and sched.events[self._fault_idx].at <= self._batch_no):
+            ev = sched.events[self._fault_idx]
+            self._fault_idx += 1
+            new = set(ev.servers)
+            if ev.kind == "crash":
+                if new - self._failed:
+                    self._failed |= new
+                    self._straggling -= new
+                    changed = True
+                    with self._cv:
+                        self.stats.crashes += 1
+            elif ev.kind == "recover":
+                if new & self._failed:
+                    self._failed -= new
+                    changed = True
+                    with self._cv:
+                        self.stats.recoveries += 1
+                self._straggling -= new
+            else:                             # "straggle"
+                self._straggling |= new - self._failed
+        if changed:
+            self._active = (self.session if not self._failed
+                            else self.session.fail(tuple(sorted(self._failed))))
 
     def _run_batch(self, lane: tuple, batch: list) -> None:
         kind, iters = lane
-        args = [a for a, _ in batch]
-        futs = [f for _, f in batch]
-        try:
-            if kind == "sssp":
-                prog = algorithms.multi_sssp(args)
+        now = time.monotonic()
+        live = []
+        for arg, fut, dl in batch:
+            if fut.cancelled():
+                continue
+            if dl is not None and now > dl:
+                with self._cv:
+                    self.stats.expired_queries += 1
+                fut.set_exception(TimeoutError(
+                    f"{kind} query expired after waiting past its deadline"))
             else:
-                prog = algorithms.personalized_pagerank(
-                    np.stack(args, axis=1))
-            res = self.session.with_program(prog).run(iters)
-        except Exception as e:                 # fan the failure out too
-            for f in futs:
-                f.set_exception(e)
+                live.append((arg, fut, dl))
+        if not live:
+            return
+        self._apply_faults()
+        self._batch_no += 1
+        self._execute_split(kind, live, iters)
+
+    def _execute_split(self, kind: str, entries: list, iters: int) -> None:
+        """Run one (sub-)batch; on failure bisect and retry each half.
+
+        A single poison query therefore reaches a singleton sub-batch after
+        O(log B) retries, fails alone (`stats.failed_queries`), and every
+        other future in the original batch still resolves.
+        """
+        futs = [f for _, f, _ in entries]
+        try:
+            res = self._execute(kind, [a for a, _, _ in entries], iters)
+        except Exception as e:
+            if len(entries) == 1:
+                with self._cv:
+                    self.stats.failed_queries += 1
+                if not futs[0].cancelled():
+                    futs[0].set_exception(e)
+                return
+            mid = len(entries) // 2
+            with self._cv:
+                self.stats.retries += 2
+            self._execute_split(kind, entries[:mid], iters)
+            self._execute_split(kind, entries[mid:], iters)
             return
         with self._cv:
-            self.stats.queries += len(batch)
+            self.stats.queries += len(entries)
             self.stats.batches += 1
             self.stats.shuffle_bits += res.shuffle_bits
         for b, f in enumerate(futs):
-            f.set_result(res.state[:, b])
+            if not f.cancelled():
+                f.set_result(res.state[:, b])
+
+    def _execute(self, kind: str, args: list, iters: int):
+        """Build the batched program and run it on the current (possibly
+        degraded) session. The seam fault tests monkeypatch."""
+        if kind == "sssp":
+            prog = algorithms.multi_sssp(list(args))
+        else:
+            prog = algorithms.personalized_pagerank(np.stack(args, axis=1))
+        sched = None
+        if self._straggling:
+            from ..core.faults import FaultSchedule
+            sched = FaultSchedule(
+                [(0, "straggle", tuple(sorted(self._straggling)))])
+        return self._active.with_program(prog).run(iters,
+                                                   fault_schedule=sched)

@@ -1,0 +1,161 @@
+"""Session checkpoint/restore: durability, bitwise resume, elastic restore.
+
+The acceptance contract (ISSUE 7): checkpoint -> kill -> restore resumes
+with a final state bitwise-identical to the uninterrupted run, both onto
+the same K and elastically onto K' != K; and a crash injected at ANY point
+of a save never corrupts the newest complete checkpoint (manifest-last
+atomic publish).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as algo
+from repro.core import engine, faults
+from repro.core import graph_models as gm
+from repro.core.allocation import divisible_n, er_allocation
+from repro.core.checkpoint import (SessionCheckpointer, alloc_fingerprint,
+                                   load_checkpoint)
+
+
+@pytest.fixture
+def setup():
+    K, r = 5, 2
+    n = divisible_n(60, K, r)
+    g = gm.erdos_renyi(n, 0.2, seed=3)
+    return g, er_allocation(n, K, r), algo.pagerank()
+
+
+def test_checkpoint_kill_restore_same_K_is_bitwise(setup, tmp_path):
+    g, alloc, prog = setup
+    full = engine.compile(prog, g, alloc, "coded").run(8)
+    ck = SessionCheckpointer(str(tmp_path), keep=3)
+    engine.compile(prog, g, alloc, "coded").run(5, checkpoint=ck,
+                                                checkpoint_every=2)
+    ck.wait()
+    # "kill": the original session object is simply gone; a fresh process
+    # rebuilds everything from (directory, program, graph).
+    eng, ckpt = engine.restore(str(tmp_path), prog, g)
+    assert ckpt.iteration == 5
+    assert ckpt.fingerprint == alloc_fingerprint(alloc)
+    res = eng.run(3, state=ckpt.state, start_iter=ckpt.iteration,
+                  start_bits=ckpt.shuffle_bits)
+    assert np.array_equal(res.state, full.state)
+    assert res.shuffle_bits == full.shuffle_bits
+    assert res.iters == full.iters
+
+
+def test_elastic_restore_onto_different_K_is_bitwise(setup, tmp_path):
+    g, alloc, prog = setup
+    full = engine.compile(prog, g, alloc, "coded").run(8)
+    ck = SessionCheckpointer(str(tmp_path))
+    engine.compile(prog, g, alloc, "coded").run(4, checkpoint=ck,
+                                                checkpoint_every=4)
+    ck.wait()
+    for K_new in (2, 4, 6):             # n=60 divides all of these at r=2
+        eng, ckpt = engine.restore(str(tmp_path), prog, g, K=K_new)
+        assert eng.alloc.K == K_new
+        res = eng.run(4, state=ckpt.state, start_iter=ckpt.iteration)
+        # State is bitwise-identical (canonical CSR reduce order); only the
+        # schedule - hence the bits - changes with the membership.
+        assert np.array_equal(res.state, full.state), K_new
+
+
+def test_crash_mid_save_never_corrupts_latest(setup, tmp_path, monkeypatch):
+    g, alloc, prog = setup
+    ck = SessionCheckpointer(str(tmp_path), keep=5)
+    ck.save(1, np.ones(4, np.float32), 100, alloc, blocking=True)
+    good = load_checkpoint(str(tmp_path))
+
+    # Crash at every byte boundary of the save sequence: array write,
+    # manifest write, publish. Each must leave epoch_1 intact.
+    real_save, real_dump, real_replace = np.save, json.dump, os.replace
+    for fail in ("array", "manifest", "publish"):
+        def boom(*a, **k):
+            raise OSError(f"disk died during {fail}")
+        if fail == "array":
+            monkeypatch.setattr(np, "save", boom)
+        elif fail == "manifest":
+            monkeypatch.setattr(json, "dump", boom)
+        else:
+            monkeypatch.setattr(os, "replace", boom)
+        ck.save(2, np.zeros(4, np.float32), 200, alloc)
+        with pytest.raises(OSError, match="disk died"):
+            ck.wait()                    # background failure surfaces here
+        monkeypatch.setattr(np, "save", real_save)
+        monkeypatch.setattr(json, "dump", real_dump)
+        monkeypatch.setattr(os, "replace", real_replace)
+        assert ck.epochs() == [1]
+        again = load_checkpoint(str(tmp_path))
+        assert again.iteration == good.iteration
+        assert np.array_equal(again.state, good.state)
+
+    # And after the disk "heals", the next save publishes normally.
+    ck.save(2, np.zeros(4, np.float32), 200, alloc, blocking=True)
+    assert ck.epochs() == [1, 2]
+
+
+def test_manifest_last_partial_dirs_are_invisible(setup, tmp_path):
+    g, alloc, prog = setup
+    ck = SessionCheckpointer(str(tmp_path))
+    ck.save(3, np.arange(4, dtype=np.float32), 7, None, blocking=True)
+    # A torn copy (no manifest) and a scratch dir must both be ignored.
+    os.makedirs(tmp_path / "epoch_9")
+    np.save(tmp_path / "epoch_9" / "state.npy", np.zeros(4))
+    os.makedirs(tmp_path / ".tmp_epoch_11")
+    assert ck.epochs() == [3]
+    assert load_checkpoint(str(tmp_path)).iteration == 3
+
+
+def test_retention_keeps_newest_n(setup, tmp_path):
+    _, alloc, _ = setup
+    ck = SessionCheckpointer(str(tmp_path), keep=2)
+    for it in range(1, 6):
+        ck.save(it, np.full(3, it, np.float32), it * 10, None, blocking=True)
+    assert ck.epochs() == [4, 5]
+    assert ck.latest() == 5
+    assert load_checkpoint(str(tmp_path), epoch=4).shuffle_bits == 40
+    with pytest.raises(FileNotFoundError, match="epoch 1"):
+        load_checkpoint(str(tmp_path), epoch=1)
+
+
+def test_corruption_is_detected(setup, tmp_path):
+    _, alloc, _ = setup
+    ck = SessionCheckpointer(str(tmp_path))
+    ck.save(1, np.ones(8, np.float32), 1, alloc, blocking=True)
+    p = tmp_path / "epoch_1" / "state.npy"
+    arr = np.load(p)
+    arr[0] = -1.0
+    np.save(p, arr)
+    with pytest.raises(ValueError, match="digest mismatch"):
+        load_checkpoint(str(tmp_path))
+
+
+def test_restore_validation(setup, tmp_path):
+    g, alloc, prog = setup
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        engine.restore(str(tmp_path), prog, g)
+    ck = SessionCheckpointer(str(tmp_path))
+    ck.save(1, np.ones(7, np.float32), 1, alloc, blocking=True)
+    g_small = gm.erdos_renyi(10, 0.3, seed=0)
+    with pytest.raises(ValueError, match="n="):
+        engine.restore(str(tmp_path), prog, g_small)
+
+
+def test_checkpoint_through_failure_epoch(setup, tmp_path):
+    """Checkpoints taken while degraded record the degraded allocation, so
+    a restore resumes on the post-failure membership."""
+    g, alloc, prog = setup
+    sched = faults.FaultSchedule([(1, "crash", (2,))])
+    ck = SessionCheckpointer(str(tmp_path))
+    res = engine.compile(prog, g, alloc, "coded").run(
+        4, checkpoint=ck, checkpoint_every=1, fault_schedule=sched)
+    ck.wait()
+    eng, ckpt = engine.restore(str(tmp_path), prog, g)
+    assert not ckpt.alloc.map_sets[2].any()      # degraded alloc persisted
+    assert np.array_equal(ckpt.state, res.state)
+    more = eng.run(2, state=ckpt.state, start_iter=ckpt.iteration)
+    ref = algo.reference_run(prog, g, 6)
+    assert np.array_equal(more.state, ref)

@@ -133,3 +133,201 @@ def test_straggler_plan_rejects_unhealthy_groups_and_no_schedule():
     other = er_allocation(2 * n, K, r)
     with pytest.raises(ValueError, match="compiled for"):
         faults.straggler_coded_load(plan, other, (0,))
+
+
+# ---- PR 7: coded plan repair + deterministic fault injection ----
+
+def _models(n):
+    return [
+        ("er", gm.erdos_renyi(n, 0.2, seed=5)),
+        ("pl", gm.power_law(n, 2.5, seed=6)),
+        ("sbm", gm.stochastic_block(n // 2, n - n // 2, 0.4, 0.08, seed=7)),
+    ]
+
+
+def _delivered(plan, g, alloc, prog):
+    from repro.core.shuffle_plan import ShufflePlan  # noqa: F401
+    ev = prog.map_edge_values(g, prog.init(g)).astype(np.float32)
+    return plan.execute_coded_sparse(ev, plan.edge_tables(g.csr, alloc))
+
+
+def test_repair_matches_fresh_compile_across_models():
+    """Acceptance gate: for |failed| < r the repaired plan is the fresh
+    degraded compile - identical arrays except `col_sender` (which fresh
+    compilation would still point at dead servers) - and delivers bitwise-
+    equal words."""
+    import dataclasses
+
+    from repro.core.shuffle_plan import compile_plan_csr
+
+    K, r = 6, 3
+    n = divisible_n(120, K, r)
+    alloc = er_allocation(n, K, r)
+    prog = algo.pagerank()
+    for name, g in _models(n):
+        plan = compile_plan_csr(g.csr, alloc)
+        for failed in [(1,), (0, 4)]:
+            rep, degraded, stats = plan.repair(g.csr, alloc, failed)
+            fresh = compile_plan_csr(g.csr, degraded)
+            for f in dataclasses.fields(type(rep)):
+                a, b = getattr(rep, f.name), getattr(fresh, f.name)
+                if f.name == "col_sender":
+                    # Fresh compile keeps dead multicasters; repair must not.
+                    assert np.isin(b, failed).any(), (name, failed)
+                    assert not np.isin(a, failed).any(), (name, failed)
+                else:
+                    assert np.array_equal(a, b), (name, failed, f.name)
+            assert rep.coded_bits == fresh.coded_bits
+            assert stats.demoted_pairs == 0 and stats.remapped_vertices == 0
+            assert stats.handover_bits > 0
+            got = _delivered(rep, g, degraded, prog)
+            want = _delivered(fresh, g, degraded, prog)
+            for fld in ("k", "i", "j", "values", "ptr"):
+                assert np.array_equal(getattr(got, fld), getattr(want, fld))
+            assert got.bits_sent == want.bits_sent
+
+
+def test_repair_beyond_r_demotes_and_remaps_but_stays_exact(setup):
+    """|failed| >= r: orphaned batches are re-Mapped, unhealthy groups are
+    demoted to unicast, and the end state still matches the oracle."""
+    g, alloc, prog = setup          # K=5, r=2
+    from repro.core.shuffle_plan import compile_plan_csr
+
+    plan = compile_plan_csr(g.csr, alloc)
+    rep, degraded, stats = plan.repair(g.csr, alloc, (0, 1))
+    assert stats.remapped_vertices == alloc.g
+    assert stats.demoted_pairs >= 0
+    ref = algo.reference_run(prog, g, 3)
+    res, rstats = faults.run_with_failure(prog, g, alloc, 3, (0, 1),
+                                          fail_at_iter=1)
+    np.testing.assert_array_equal(res.state, ref)
+    assert rstats.remapped_vertices == alloc.g
+
+
+def test_repair_validation(setup):
+    g, alloc, _ = setup
+    from repro.core.shuffle_plan import compile_plan_csr
+
+    plan = compile_plan_csr(g.csr, alloc)
+    with pytest.raises(ValueError, match="out of range"):
+        plan.repair(g.csr, alloc, (alloc.K,))
+    g2 = gm.erdos_renyi(2 * alloc.n, 0.1, seed=0)
+    with pytest.raises(ValueError, match="compiled for"):
+        plan.repair(g2.csr, alloc, (0,))
+    bare = compile_plan_csr(g.csr, alloc, schedule=False)
+    with pytest.raises(ValueError, match="schedule=False"):
+        bare.repair(g.csr, alloc, (0,))
+
+
+def test_post_failure_coded_beats_uncoded_fallback(setup):
+    """The tentpole payoff: staying coded after a crash costs measurably
+    fewer bits than the legacy uncoded degradation, at identical state."""
+    g, alloc, prog = setup
+    ref = algo.reference_run(prog, g, 6)
+    res_c, st_c = faults.run_with_failure(prog, g, alloc, 6, (1,),
+                                          fail_at_iter=2)
+    res_u, st_u = faults.run_with_failure(prog, g, alloc, 6, (1,),
+                                          fail_at_iter=2, mode="uncoded")
+    np.testing.assert_array_equal(res_c.state, ref)
+    np.testing.assert_array_equal(res_u.state, ref)
+    assert res_c.shuffle_bits < res_u.shuffle_bits
+    assert st_c.recovery_bits < st_u.recovery_bits
+    assert st_c.recovery_bits > 0
+
+
+def test_engine_fail_session_and_recover(setup):
+    """CompiledEngine.fail + FaultSchedule crash/recover round-trip: values
+    are never perturbed, the degraded epochs pay the hand-over overhead,
+    and recovery returns to the original schedule's bits."""
+    g, alloc, prog = setup
+    eng = engine.compile(prog, g, alloc, "coded")
+    clean = eng.run(6)
+    sched = faults.FaultSchedule([(2, "crash", (1,)), (4, "recover", (1,))])
+    res = eng.run(6, fault_schedule=sched)
+    np.testing.assert_array_equal(res.state, clean.state)
+    log = res.faults
+    assert log.crashes == 1 and log.recoveries == 1
+    assert log.handover_bits > 0
+    assert log.recovery_bits > 0
+    assert res.shuffle_bits > clean.shuffle_bits  # degraded epochs cost more
+    # fail() itself returns a session on the degraded allocation.
+    deg = eng.fail((1,))
+    assert deg.recovery.handover_bits > 0
+    assert not deg.alloc.map_sets[1].any()
+    np.testing.assert_array_equal(deg.run(3).state,
+                                  algo.reference_run(prog, g, 3))
+
+
+def test_engine_fail_validation(setup):
+    g, alloc, prog = setup
+    eng = engine.compile(prog, g, alloc, "coded")
+    with pytest.raises(ValueError, match="out of range"):
+        eng.fail((alloc.K + 3,))
+    ref = engine.compile(prog, g, alloc, "coded-ref")
+    with pytest.raises(ValueError, match="plan-mode"):
+        ref.fail((0,))
+
+
+def test_straggle_event_reprices_without_touching_values(setup):
+    g, alloc, prog = setup
+    eng = engine.compile(prog, g, alloc, "coded")
+    clean = eng.run(4)
+    sched = faults.FaultSchedule([(1, "straggle", (0,)),
+                                  (2, "recover", (0,))])
+    res = eng.run(4, fault_schedule=sched)
+    np.testing.assert_array_equal(res.state, clean.state)
+    assert res.faults.straggled_iters == 1
+    assert res.shuffle_bits > clean.shuffle_bits
+
+
+def test_fault_schedule_validation_and_determinism():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.FaultSchedule([(0, "explode", (1,))])
+    with pytest.raises(ValueError, match=">= 0"):
+        faults.FaultSchedule([(-1, "crash", (1,))])
+    a = faults.FaultSchedule.random(6, 12, seed=3)
+    b = faults.FaultSchedule.random(6, 12, seed=3)
+    assert a.events == b.events
+    assert a.horizon <= 11
+    assert faults.FaultSchedule([]).horizon == -1
+    # Events sort by boundary and normalize server tuples.
+    s = faults.FaultSchedule([(3, "recover", 2), (1, "crash", (2, 2))])
+    assert s.events[0] == faults.FaultEvent(1, "crash", (2,))
+    assert s.at(3) == [faults.FaultEvent(3, "recover", (2,))]
+
+
+def test_rebalance_pad_routes_through_padding():
+    K, r = 5, 2
+    n = divisible_n(50, K, r)
+    g = gm.erdos_renyi(n, 0.2, seed=8)
+    alloc = er_allocation(n, K, r)
+    K_new = 4
+    assert divisible_n(n, K_new, r) != n
+    with pytest.raises(ValueError, match="pad=True"):
+        faults.rebalance(alloc, K_new)
+    alloc2 = faults.rebalance(alloc, K_new, pad=True)
+    assert alloc2.n == divisible_n(n, K_new, r)
+    g2 = g.padded(alloc2.n)
+    res = engine.run(algo.sssp(0), g2, alloc2, 3, mode="coded")
+    ref = algo.reference_run(algo.sssp(0), g, 3)
+    # SSSP distances ignore the virtual isolated pad vertices entirely.
+    np.testing.assert_array_equal(res.state[:n], ref)
+    assert np.isinf(res.state[n:]).all()
+
+
+def test_straggler_dense_form_deprecated_but_exact():
+    """PR 7 satellite: the dense-adjacency form warns (plan path is the
+    supported one) and still reproduces the plan accounting exactly."""
+    from repro.core.shuffle_plan import compile_plan_csr
+
+    K, r = 6, 3
+    n = divisible_n(120, K, r)
+    g = gm.erdos_renyi(n, 0.15, seed=11)
+    alloc = er_allocation(n, K, r)
+    plan = compile_plan_csr(g.csr, alloc, validate=False)
+    with pytest.warns(DeprecationWarning, match="dense adjacency"):
+        dense = faults.straggler_coded_load(g.adj, alloc, (0,))
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")    # the plan form must stay silent
+        assert faults.straggler_coded_load(plan, alloc, (0,)) == dense

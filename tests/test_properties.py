@@ -152,3 +152,40 @@ def test_graph_models_are_simple_undirected(model, seed):
     assert not g.adj.diagonal().any()
     if model == "rb":
         assert not g.adj[:24, :24].any() and not g.adj[24:, 24:].any()
+
+
+@st.composite
+def alloc_failures(draw):
+    """(graph, allocation, failed-set) draws for the degradation invariants,
+    spanning |failed| from 1 to K-1 (so both the repair regime and the
+    re-Map regime are exercised)."""
+    g, alloc = draw(graph_allocs())
+    m = draw(st.integers(1, alloc.K - 1))
+    failed = draw(st.sets(st.integers(0, alloc.K - 1),
+                          min_size=m, max_size=m))
+    return g, alloc, tuple(sorted(failed))
+
+
+@given(alloc_failures())
+@settings(max_examples=20, deadline=None)
+def test_degrade_allocation_invariants_property(case):
+    """PR 7 satellite: for random (alloc, failed) draws the degraded
+    allocation keeps every vertex Mapped somewhere, hands Reduce ownership
+    only to survivors, re-Maps nothing while |failed| < r, and
+    `run_with_failure` (the coded repair path) stays bitwise-equal to the
+    single-machine oracle."""
+    from repro.core import faults
+
+    g, alloc, failed = case
+    degraded, stats = faults.degrade_allocation(alloc, failed)
+    assert degraded.map_sets.any(axis=0).all()        # no vertex lost
+    assert not np.isin(degraded.reduce_owner, failed).any()
+    assert not degraded.map_sets[list(failed)].any()
+    if len(failed) < alloc.r:
+        assert stats.remapped_vertices == 0
+    prog = algo.pagerank()
+    res, rstats = faults.run_with_failure(prog, g, alloc, 2, failed,
+                                          fail_at_iter=1)
+    np.testing.assert_array_equal(res.state,
+                                  algo.reference_run(prog, g, 2))
+    assert rstats.remapped_vertices == stats.remapped_vertices

@@ -6,6 +6,8 @@ concurrent queries into shared batched runs (fewer batches than queries,
 shuffle bits = schedule bits x total payload columns), and (c) validate
 inputs and refuse work after close.
 """
+from concurrent.futures import CancelledError
+
 import numpy as np
 import pytest
 
@@ -110,3 +112,104 @@ def test_close_drains_pending_queries():
     for s, f in zip((0, 1), futs):
         ref = engine.compile(algo.sssp(s), g, alloc, "coded").run(3)
         assert np.array_equal(f.result(timeout=5), ref.state)
+
+
+# ---- PR 7: chaos-hardened serving ----
+
+def test_poison_query_fails_alone_batchmates_resolve():
+    """Acceptance gate: one poison query in a full batch fails only its own
+    future (after O(log B) bisection retries); every batchmate resolves and
+    the failure is recorded in ServeStats."""
+    g, alloc = _case()
+    svc = GraphService(g, alloc, max_batch=4, max_wait_s=5.0)
+    orig = svc._execute
+    poison_root = 2
+
+    def poisoned(kind, args, iters):
+        if poison_root in args:
+            raise RuntimeError("poison value")
+        return orig(kind, args, iters)
+
+    svc._execute = poisoned
+    futs = [svc.submit("sssp", s, iters=3) for s in range(4)]
+    svc.close()
+    for s, f in enumerate(futs):
+        if s == poison_root:
+            with pytest.raises(RuntimeError, match="poison value"):
+                f.result(timeout=5)
+        else:
+            ref = engine.compile(algo.sssp(s), g, alloc, "coded").run(3)
+            assert np.array_equal(f.result(timeout=5), ref.state), s
+    assert svc.stats.failed_queries == 1
+    assert svc.stats.queries == 3
+    assert svc.stats.retries > 0
+
+
+def test_deadline_expires_queued_queries():
+    g, alloc = _case()
+    svc = GraphService(g, alloc, max_batch=4, max_wait_s=0.2)
+    # An already-lapsed deadline fails at admission; a generous one rides.
+    dead = svc.submit("sssp", 0, iters=3, deadline_s=0.0)
+    live = svc.submit("sssp", 1, iters=3, deadline_s=60.0)
+    svc.close()
+    with pytest.raises(TimeoutError, match="deadline"):
+        dead.result(timeout=5)
+    ref = engine.compile(algo.sssp(1), g, alloc, "coded").run(3)
+    assert np.array_equal(live.result(timeout=5), ref.state)
+    assert svc.stats.expired_queries == 1
+    assert svc.stats.queries == 1
+
+
+def test_close_nowait_cancels_queued_futures():
+    """Satellite fix: close(wait=False) must not strand queued futures."""
+    g, alloc = _case()
+    svc = GraphService(g, alloc, max_batch=64, max_wait_s=60.0)
+    futs = [svc.submit("sssp", s, iters=3) for s in range(3)]
+    svc.close(wait=False)
+    for f in futs:
+        assert f.cancelled()
+        with pytest.raises(CancelledError):
+            f.result(timeout=1)          # resolves immediately, no hang
+    svc._worker.join(timeout=10)
+    assert not svc._worker.is_alive()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit("sssp", 0)
+
+
+def test_worker_death_fans_exception_to_queued_futures():
+    g, alloc = _case()
+    svc = GraphService(g, alloc, max_batch=2, max_wait_s=60.0)
+
+    def die(lane, batch):                # outside _run_batch's try/except
+        raise MemoryError("worker died outside _run_batch")
+
+    svc._run_batch = die
+    futs = [svc.submit("sssp", s, iters=2) for s in (0, 1)]
+    for f in futs:
+        with pytest.raises(MemoryError, match="worker died"):
+            f.result(timeout=10)
+    svc._worker.join(timeout=10)
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit("sssp", 0)
+
+
+def test_fault_schedule_crash_recover_through_service():
+    """Chaos gate: a crash at a batch boundary swaps in the repaired coded
+    session; results stay bitwise-correct and the events land in stats."""
+    from repro.core.faults import FaultSchedule
+
+    g, alloc = _case()
+    sched = FaultSchedule([(1, "crash", (1,)), (2, "recover", (1,))])
+    with GraphService(g, alloc, max_batch=2, max_wait_s=5.0,
+                      fault_schedule=sched) as svc:
+        results = []
+        for wave in range(3):            # one full batch per boundary
+            futs = [svc.submit("sssp", 2 * wave + b, iters=3)
+                    for b in range(2)]
+            results.extend(f.result(timeout=60) for f in futs)
+    for s, d in enumerate(results):
+        ref = engine.compile(algo.sssp(s), g, alloc, "coded").run(3)
+        assert np.array_equal(d, ref.state), s
+    assert svc.stats.crashes == 1
+    assert svc.stats.recoveries == 1
+    assert svc.stats.queries == 6
