@@ -16,11 +16,9 @@ The ``scale_batched_pagerank_*`` record is the CI-gated one
 widest B, and its derived string carries the full queries/sec-vs-B curve so
 the committed baseline documents the amortization.
 """
-import time
-
 import numpy as np
 
-from repro import graphs
+from repro import graphs, obs
 from repro.core import algorithms as algo
 from repro.core import engine
 from repro.core.allocation import divisible_n, er_allocation
@@ -49,9 +47,9 @@ def run(report, smoke=False):
         s = sess.with_program(
             algo.personalized_pagerank(algo.uniform_prefs(n, B)))
         assert s.plan is plan, "batch width must not recompile the schedule"
-        t0 = time.perf_counter()
-        res = s.run(iters)
-        last_dt = time.perf_counter() - t0
+        with obs.stopwatch() as sw:
+            res = s.run(iters)
+        last_dt = sw.s
         if bits1 is None:
             bits1 = res.shuffle_bits
         assert res.shuffle_bits == B * bits1, \
@@ -80,11 +78,11 @@ def _serve_throughput(report, g, alloc, n, max_batch, smoke):
     n_q = 2 * max_batch
     roots = rng.integers(0, n, size=n_q)
     with GraphService(g, alloc, max_batch=max_batch, max_wait_s=0.05) as svc:
-        t0 = time.perf_counter()
-        futs = [svc.submit("sssp", int(s), iters=iters) for s in roots]
-        for f in futs:
-            f.result(timeout=600)
-        dt = time.perf_counter() - t0
+        with obs.stopwatch() as sw:
+            futs = [svc.submit("sssp", int(s), iters=iters) for s in roots]
+            for f in futs:
+                f.result(timeout=600)
+        dt = sw.s
     stats = svc.stats
     report(f"serve_sssp_qps_n{n}", dt / n_q * 1e6,
            f"qps={n_q / dt:.0f} queries={stats.queries} "

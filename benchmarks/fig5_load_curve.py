@@ -9,11 +9,9 @@ full mode sweeps n in the thousands without ever touching `.adj` - closer
 to the paper's asymptotics than the original n=300 validation size, and
 free to scale past `dense_limit`.
 """
-import time
-
 import numpy as np
 
-from repro import graphs
+from repro import graphs, obs
 from repro.core import loads
 from repro.core.allocation import divisible_n, er_allocation
 
@@ -27,13 +25,13 @@ def run(report, smoke=False):
     for r in range(1, K + 1):
         alloc = er_allocation(n, K, r)
         lu, lc = [], []
-        t0 = time.perf_counter()
-        for s in range(samples):
-            g = graphs.erdos_renyi(n, P, seed=1000 + s)
-            measured = loads.empirical_loads(g, alloc)
-            lu.append(measured["uncoded"])
-            lc.append(measured["coded"])
-        us = (time.perf_counter() - t0) / samples / (2 * K) * 1e6
+        with obs.stopwatch() as sw:
+            for s in range(samples):
+                g = graphs.erdos_renyi(n, P, seed=1000 + s)
+                measured = loads.empirical_loads(g, alloc)
+                lu.append(measured["uncoded"])
+                lc.append(measured["coded"])
+        us = sw.us / samples / (2 * K)
         row = {
             "r": r,
             "uncoded": float(np.mean(lu)),

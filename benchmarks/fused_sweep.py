@@ -36,11 +36,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import sys
-import time
 
 import numpy as np
 
-from repro import graphs
+from repro import graphs, obs
 from repro.core import algorithms as algo
 from repro.core.allocation import divisible_n, er_allocation
 from repro.core.bitcodec import floats_to_words
@@ -64,21 +63,15 @@ for n_req, K, r, p in cases:
     equal = bool(np.array_equal(floats_to_words(ref.values),
                                 floats_to_words(res.values)))
 
-    iters = 5
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        plan.execute_coded_sparse(ev, tables)
-    t_numpy = (time.perf_counter() - t0) / iters
-
-    fx.execute(ev)                             # steady-state warmup
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fx.execute(ev)
-    t_fused = (time.perf_counter() - t0) / iters
+    # One warmup + mean-of-5 for both substrates (shared obs helper; the
+    # fused warmup rep is the steady-state replay, compile already paid).
+    numpy_us = obs.timeit(lambda: plan.execute_coded_sparse(ev, tables),
+                          reps=5, warmup=1)
+    fused_us = obs.timeit(lambda: fx.execute(ev), reps=5, warmup=1)
 
     rows.append({"n": n, "K": K, "r": r, "edges": int(g.num_edges),
                  "M": int(plan.all_k.size), "equal": equal,
-                 "fused_us": t_fused * 1e6, "numpy_us": t_numpy * 1e6})
+                 "fused_us": fused_us, "numpy_us": numpy_us})
 print(json.dumps(rows))
 """
 

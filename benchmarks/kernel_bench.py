@@ -1,23 +1,19 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-scale
 numbers; the BlockSpec tiling is the TPU deliverable)."""
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels.spmv import ops as spmv_ops
 from repro.kernels.ssd_scan import ops as ssd_ops
 from repro.kernels.xor_code import ops as xor_ops
 
 
 def _time(f, *args, reps=3):
-    out = f(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+    m = obs.measure(lambda: f(*args), reps=reps, warmup=1,
+                    sync=jax.block_until_ready)
+    return m.mean_us
 
 
 def run(report, smoke=False):

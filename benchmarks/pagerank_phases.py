@@ -8,11 +8,10 @@ Also measures the compile-once/execute-many ShufflePlan engine against the
 literal per-group reference on multi-iteration coded PageRank - the schedule
 is fixed by (graph, allocation), so compiling it once and replaying packed
 XOR arrays each iteration must beat re-deriving it every round."""
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import algorithms as algo
 from repro.core import engine
 from repro.core import graph_models as gm
@@ -46,20 +45,20 @@ def plan_vs_reference(report, smoke=False):
     alloc = er_allocation(n, K, r)
     prog = algo.pagerank()
 
-    t0 = time.perf_counter()
-    ref = engine.run(prog, g, alloc, iters, mode="coded-ref")
-    t_ref = time.perf_counter() - t0
+    with obs.stopwatch() as sw_ref:
+        ref = engine.run(prog, g, alloc, iters, mode="coded-ref")
+    t_ref = sw_ref.s
 
-    t0 = time.perf_counter()
-    plan = compile_plan(g.adj, alloc)
-    t_compile = time.perf_counter() - t0
+    with obs.stopwatch() as sw_compile:
+        plan = compile_plan(g.adj, alloc)
+    t_compile = sw_compile.s
     # A/B against the literal reference on the same dense Reduce, so the
     # speedup isolates the compiled Shuffle (the sparse Reduce is measured
     # separately below and in benchmarks/scale_sweep.py).
-    t0 = time.perf_counter()
-    fast = engine.run(prog, g, alloc, iters, mode="coded", plan=plan,
-                      path="dense")
-    t_plan = time.perf_counter() - t0 + t_compile
+    with obs.stopwatch() as sw_plan:
+        fast = engine.run(prog, g, alloc, iters, mode="coded", plan=plan,
+                          path="dense")
+    t_plan = sw_plan.s + t_compile
 
     assert np.array_equal(ref.state, fast.state), "plan diverged from reference"
     assert ref.shuffle_bits == fast.shuffle_bits, "plan load accounting diverged"
@@ -68,9 +67,9 @@ def plan_vs_reference(report, smoke=False):
            f"ref_s={t_ref:.3f} plan_s={t_plan:.3f} compile_s={t_compile:.3f} "
            f"speedup={speedup:.1f}x")
 
-    t0 = time.perf_counter()
-    sparse = engine.run(prog, g, alloc, iters, mode="coded", plan=plan)
-    t_sparse = time.perf_counter() - t0
+    with obs.stopwatch() as sw_sparse:
+        sparse = engine.run(prog, g, alloc, iters, mode="coded", plan=plan)
+    t_sparse = sw_sparse.s
     assert sparse.shuffle_bits == ref.shuffle_bits
     # Compare run time against run time (both reuse the same compiled plan).
     vs_dense = (t_plan - t_compile) / t_sparse
@@ -97,11 +96,9 @@ def run(report, smoke=False):
     n_spmv = min(n, 512)
     adj = jnp.array(g.adj[:n_spmv, :n_spmv], jnp.float32)
     rank = jnp.array(prog.init(g)[:n_spmv])
-    spmv_ops.pagerank_step(adj, rank).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(3):
-        spmv_ops.pagerank_step(adj, rank).block_until_ready()
-    spmv_us = (time.perf_counter() - t0) / 3 * 1e6
+    spmv_us = obs.timeit(
+        lambda: spmv_ops.pagerank_step(adj, rank).block_until_ready(),
+        reps=3, warmup=1)
     t_map1 = g.num_edges / K * PER_EDGE_MAP_S            # per-server share
     report("map_phase_spmv", spmv_us,
            f"n={n_spmv} modeled_t_map={t_map1:.4f}s")

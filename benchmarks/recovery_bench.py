@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import pathlib
 import sys
-import time
 
 import numpy as np
 
@@ -34,7 +33,7 @@ except ImportError:
     sys.path[:0] = [str(_root), str(_root / "src")]
     from repro.core import algorithms as algo
 
-from repro import graphs
+from repro import graphs, obs
 from repro.core.allocation import divisible_n, er_allocation
 from repro.core.faults import degrade_allocation, run_with_failure
 from repro.core.shuffle_plan import compile_plan_csr
@@ -53,14 +52,15 @@ def run(report, smoke=False):
     for m in range(1, r):
         failed = tuple(range(m))
 
-        t0 = time.perf_counter()
-        res_c, st_c = run_with_failure(prog, g, alloc, iters, failed,
-                                       fail_at_iter=fail_at)
-        t_coded = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        res_u, st_u = run_with_failure(prog, g, alloc, iters, failed,
-                                       fail_at_iter=fail_at, mode="uncoded")
-        t_uncoded = time.perf_counter() - t0
+        with obs.stopwatch() as sw_c:
+            res_c, st_c = run_with_failure(prog, g, alloc, iters, failed,
+                                           fail_at_iter=fail_at)
+        t_coded = sw_c.s
+        with obs.stopwatch() as sw_u:
+            res_u, st_u = run_with_failure(prog, g, alloc, iters, failed,
+                                           fail_at_iter=fail_at,
+                                           mode="uncoded")
+        t_uncoded = sw_u.s
         assert np.array_equal(res_c.state, oracle), "coded failover != oracle"
         assert np.array_equal(res_u.state, oracle), "uncoded failover != oracle"
         assert st_c.recovery_bits < st_u.recovery_bits, \
@@ -69,13 +69,13 @@ def run(report, smoke=False):
             (m, res_c.shuffle_bits, res_u.shuffle_bits)
 
         # Plan surgery vs recompiling from scratch on the degraded alloc.
-        t0 = time.perf_counter()
-        rep, degraded, rstats = plan.repair(g.csr, alloc, failed)
-        t_repair = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        compile_plan_csr(g.csr, degrade_allocation(alloc, failed)[0],
-                         validate=False)
-        t_fresh = time.perf_counter() - t0
+        with obs.stopwatch() as sw_rep:
+            rep, degraded, rstats = plan.repair(g.csr, alloc, failed)
+        t_repair = sw_rep.s
+        with obs.stopwatch() as sw_fresh:
+            compile_plan_csr(g.csr, degrade_allocation(alloc, failed)[0],
+                             validate=False)
+        t_fresh = sw_fresh.s
 
         gain = st_u.recovery_bits / st_c.recovery_bits
         report(f"recovery_f{m}", t_coded / iters * 1e6,

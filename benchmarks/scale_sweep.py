@@ -21,12 +21,11 @@ tolerance (2x on the reference container; the CI job sets BENCH_TOL=3.0 to
 absorb shared-runner hardware spread on top of that budget).
 """
 import resource
-import time
 import tracemalloc
 
 import numpy as np
 
-from repro import graphs
+from repro import graphs, obs
 from repro.core import algorithms as algo
 from repro.core import engine
 from repro.core import graph_models as gm
@@ -39,13 +38,11 @@ SAMPLER_SIZES = (100_000, 200_000, 300_000)
 
 
 def _timed(prog, g, alloc, iters, mode, plan, path):
-    tracemalloc.start()
-    t0 = time.perf_counter()
-    res = engine.run(prog, g, alloc, iters, mode=mode, plan=plan, path=path)
-    dt = time.perf_counter() - t0
-    _, peak = tracemalloc.get_traced_memory()
-    tracemalloc.stop()
-    return res, dt, peak
+    m = obs.measure(
+        lambda: engine.run(prog, g, alloc, iters, mode=mode, plan=plan,
+                           path=path),
+        reps=1, warmup=0, trace_memory=True)
+    return m.result, m.mean_s, m.peak_bytes
 
 
 def run(report, smoke=False):
@@ -104,14 +101,14 @@ def _run_large(report, prog, smoke):
     K, r = 4, 2
     n = divisible_n(100_000, K, r)
     iters = 2 if smoke else 10
-    t0 = time.perf_counter()
-    g = graphs.erdos_renyi(n, 10.0 / n, seed=7)
-    t_sample = time.perf_counter() - t0
+    with obs.stopwatch() as sw_sample:
+        g = graphs.erdos_renyi(n, 10.0 / n, seed=7)
+    t_sample = sw_sample.s
     alloc = er_allocation(n, K, r)
     tracemalloc.start()
-    t0 = time.perf_counter()
-    plan = compile_plan_csr(g.csr, alloc)          # adjacency-free compile
-    t_compile = time.perf_counter() - t0
+    with obs.stopwatch() as sw_compile:
+        plan = compile_plan_csr(g.csr, alloc)      # adjacency-free compile
+    t_compile = sw_compile.s
     plan.edge_tables(g.csr, alloc)                 # bind CSR (compile side)
     prog.map_edge_values(g, prog.init(g))          # warm degree/CSR caches
     _, peak_compile = tracemalloc.get_traced_memory()
@@ -151,12 +148,9 @@ def _sampler_sweep(report):
     """CSR-native sampler wall-clock + memory to n = 3e5: peak stays
     O(edges) (tracemalloc) while RSS never sees an [n, n] buffer."""
     for n in SAMPLER_SIZES:
-        tracemalloc.start()
-        t0 = time.perf_counter()
-        g = graphs.erdos_renyi(n, 12.0 / n, seed=1)
-        dt = time.perf_counter() - t0
-        _, peak = tracemalloc.get_traced_memory()
-        tracemalloc.stop()
+        m = obs.measure(lambda: graphs.erdos_renyi(n, 12.0 / n, seed=1),
+                        reps=1, warmup=0, trace_memory=True)
+        g, dt, peak = m.result, m.mean_s, m.peak_bytes
         nnz = g.csr.nnz
         assert peak < 400 * nnz, f"sampler peak {peak / 1e6:.1f}MB not O(edges)"
         assert peak < n * n // 8, "sampler peak reached dense-buffer scale"
@@ -165,7 +159,6 @@ def _sampler_sweep(report):
                f"edges={g.num_edges} p_emp={g.density:.2e} "
                f"peak_mb={peak / 1e6:.1f} rss_mb={rss_mb:.0f} "
                f"bytes_per_edge={peak / max(nnz, 1):.0f}")
-    t0 = time.perf_counter()
-    g = graphs.power_law(100_000, 2.5, seed=1)
-    dt = time.perf_counter() - t0
-    report("sampler_pl_n100000", dt * 1e6, f"edges={g.num_edges}")
+    with obs.stopwatch() as sw:
+        g = graphs.power_law(100_000, 2.5, seed=1)
+    report("sampler_pl_n100000", sw.us, f"edges={g.num_edges}")

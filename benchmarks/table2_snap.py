@@ -11,9 +11,9 @@ synthetic stand-in (sampled/cached offline). For the ER stand-in the
 measured gains are asserted against the Theorem-1 closed forms - the
 acceptance contract of the Table II reproduction.
 """
-import time
 import tracemalloc
 
+from repro import obs
 from repro.experiments import DatasetUnavailable, run_table2
 
 
@@ -28,9 +28,9 @@ def _full_dataset() -> str:
 
 def run(report, smoke=False):
     if smoke:
-        t0 = time.perf_counter()
-        result = run_table2(("karate",), K=4, r_grid=(1, 2), report=report)
-        dt = time.perf_counter() - t0
+        with obs.stopwatch() as sw:
+            result = run_table2(("karate",), K=4, r_grid=(1, 2), report=report)
+        dt = sw.s
         row = result["rows"][-1]
         report(f"scale_table2_karate_n{row['n']}", dt * 1e6,
                f"offline registry->harness path, gain_r2={row['gain']:.2f}")
@@ -38,11 +38,11 @@ def run(report, smoke=False):
 
     name = _full_dataset()
     tracemalloc.start()
-    t0 = time.perf_counter()
-    result = run_table2((name,), K=6, r_grid=(1, 2, 3),
-                        download=None,        # registry defers to the env
-                        report=report)
-    dt = time.perf_counter() - t0
+    with obs.stopwatch() as sw:
+        result = run_table2((name,), K=6, r_grid=(1, 2, 3),
+                            download=None,    # registry defers to the env
+                            report=report)
+    dt = sw.s
     _, peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()
     for row in result["rows"]:

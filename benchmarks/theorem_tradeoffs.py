@@ -6,11 +6,9 @@ off one CSR-compiled ShufflePlan per realization
 (`loads.empirical_loads(g, alloc)`) instead of separate subset-enumeration
 and per-server scans - no `.adj` anywhere, so the sweep scales past
 `dense_limit` by just raising `base`."""
-import time
-
 import numpy as np
 
-from repro import graphs
+from repro import graphs, obs
 from repro.core.allocation import (bipartite_allocation, divisible_n,
                                    er_allocation)
 from repro.core.loads import empirical_loads
@@ -19,12 +17,13 @@ SAMPLES = 3
 
 
 def _measure(report, tag, gs, alloc):
-    lu, lc, t0 = [], [], time.perf_counter()
-    for g in gs:
-        measured = empirical_loads(g, alloc)
-        lu.append(measured["uncoded"])
-        lc.append(measured["coded"])
-    us = (time.perf_counter() - t0) / len(gs) * 1e6
+    lu, lc = [], []
+    with obs.stopwatch() as sw:
+        for g in gs:
+            measured = empirical_loads(g, alloc)
+            lu.append(measured["uncoded"])
+            lc.append(measured["coded"])
+    us = sw.us / len(gs)
     gain = np.mean(lu) / np.mean(lc) if np.mean(lc) else float("nan")
     report(tag, us, f"uncoded={np.mean(lu):.4f} coded={np.mean(lc):.4f} "
            f"gain={gain:.2f}")

@@ -61,6 +61,7 @@ import threading
 
 import numpy as np
 
+from ..obs import get_tracer
 from .allocation import Allocation
 
 _FORMAT = "repro-session-checkpoint-v1"
@@ -106,19 +107,26 @@ class SessionCheckpointer:
     def save(self, iteration: int, state: np.ndarray, shuffle_bits: int,
              alloc: Allocation | None, blocking: bool = False) -> None:
         """Snapshot synchronously, write to disk on a background thread."""
-        self.wait()                          # also re-raises a prior failure
-        snap = np.array(state, dtype=np.float32, copy=True)
-        self._thread = threading.Thread(
-            target=self._guarded_write,
-            args=(int(iteration), snap, int(shuffle_bits), alloc),
-            daemon=True)
-        self._thread.start()
+        with get_tracer().span("checkpoint.save", iteration=int(iteration),
+                               shuffle_bits=int(shuffle_bits)):
+            self.wait()                      # also re-raises a prior failure
+            snap = np.array(state, dtype=np.float32, copy=True)
+            self._thread = threading.Thread(
+                target=self._guarded_write,
+                args=(int(iteration), snap, int(shuffle_bits), alloc),
+                daemon=True)
+            self._thread.start()
         if blocking:
             self.wait()
 
     def _guarded_write(self, iteration, state, bits, alloc):
         try:
-            self._write(iteration, state, bits, alloc)
+            # Own root span: this runs on the checkpoint writer thread, so
+            # it lands on its own trace track rather than inside the
+            # iteration that triggered it.
+            with get_tracer().span("checkpoint.write", iteration=iteration,
+                                   bytes=int(state.nbytes)):
+                self._write(iteration, state, bits, alloc)
         except BaseException as exc:         # surfaced by the next wait()
             self._error = exc
 
@@ -185,6 +193,13 @@ def load_checkpoint(directory: str,
                     epoch: int | None = None) -> SessionCheckpoint:
     """Read one published epoch back (newest by default), verifying every
     array against its manifest sha256."""
+    with get_tracer().span("checkpoint.load",
+                           epoch=-1 if epoch is None else int(epoch)):
+        return _load_checkpoint(directory, epoch)
+
+
+def _load_checkpoint(directory: str,
+                     epoch: int | None = None) -> SessionCheckpoint:
     epochs = _epochs(directory)
     if epoch is None:
         if not epochs:

@@ -60,6 +60,7 @@ import dataclasses
 
 import numpy as np
 
+from ..obs import get_tracer
 from .algorithms import VertexProgram
 from .allocation import Allocation
 from .bitcodec import T_BITS
@@ -273,7 +274,10 @@ class CompiledEngine:
             # Uncoded only consumes the missing set; skip the column tables.
             # CSR entry point: adjacency-free and schedule-identical to the
             # dense compile, so CSR-native graphs never materialize [n, n].
-            plan = compile_plan_csr(g.csr, alloc, schedule=mode != "uncoded")
+            with get_tracer().span("engine.compile", mode=mode,
+                                   backend=backend, n=g.n, K=alloc.K):
+                plan = compile_plan_csr(g.csr, alloc,
+                                        schedule=mode != "uncoded")
         self.plan = plan
         self.tables = (plan.edge_tables(g.csr, alloc)
                        if sparse and self.distributed and mode in PLAN_MODES
@@ -345,7 +349,10 @@ class CompiledEngine:
         """Fold one boundary's fault events into the (failed, straggling)
         sets; returns (current session, whether a new crash landed)."""
         crashed = changed = False
+        tr = get_tracer()
         for ev in events:
+            tr.event(f"fault.{ev.kind}", at=ev.at,
+                     servers=",".join(str(s) for s in ev.servers))
             if ev.kind == "crash":
                 new = set(ev.servers) - failed
                 if new:
@@ -372,6 +379,7 @@ class CompiledEngine:
     def _step(self, state: np.ndarray) -> tuple[np.ndarray, int]:
         """One Map -> Shuffle -> Reduce round; returns (state', bits_sent)."""
         program, g, alloc = self.program, self.g, self.alloc
+        tr = get_tracer()
         if self.sparse:
             if self.backend == "spmv":
                 # Coverage was verified when `tables` was built, so the
@@ -384,30 +392,42 @@ class CompiledEngine:
                     if self.distributed else 0
                 return _reduce_spmv(program, g, state,
                                     **self.backend_opts), bits
-            edge_vals = program.map_edge_values(g, state).astype(np.float32)
+            with tr.span("phase.map", nnz=g.csr.nnz):
+                edge_vals = program.map_edge_values(g, state) \
+                    .astype(np.float32)
             if not self.distributed:
-                return program.reduce_edges(edge_vals, g.csr.indptr,
-                                            state, g), 0
+                with tr.span("phase.reduce"):
+                    return program.reduce_edges(edge_vals, g.csr.indptr,
+                                                state, g), 0
+            # The executor emits phase.encode / phase.exchange /
+            # phase.decode spans itself (it knows words and bits).
             res = (self.fused.execute(edge_vals)
                    if self.backend == "fused"
                    else self.plan.execute_sparse(edge_vals, self.mode,
                                                  self.tables))
-            state = _reduce_sparse(program, g, edge_vals, res,
-                                   self.tables.gather, state)
+            with tr.span("phase.reduce", nnz=g.csr.nnz):
+                state = _reduce_sparse(program, g, edge_vals, res,
+                                       self.tables.gather, state)
             return state, res.bits_sent
-        values = program.map_values(g, state).astype(np.float32)
+        with tr.span("phase.map"):
+            values = program.map_values(g, state).astype(np.float32)
         if not self.distributed:
-            return program.reduce(values, g.adj, state, g), 0
+            with tr.span("phase.reduce"):
+                return program.reduce(values, g.adj, state, g), 0
         if self.mode in PLAN_MODES:
             res = self.plan.execute(values, self.mode)
-            return _reduce_plan(program, g, alloc, values, res,
-                                state), res.bits_sent
+            with tr.span("phase.reduce"):
+                return _reduce_plan(program, g, alloc, values, res,
+                                    state), res.bits_sent
         if self.mode == "coded-ref":
-            ref = run_coded(g.adj, values, alloc)
-            delivered, bits = ref.delivered, ref.bits_sent
-            bits += _unicast_leftovers(g, alloc, values, delivered)
-            return _reduce_distributed(program, g, alloc, values, delivered,
-                                       state), bits
+            with tr.span("phase.exchange", mode=self.mode) as sp:
+                ref = run_coded(g.adj, values, alloc)
+                delivered, bits = ref.delivered, ref.bits_sent
+                bits += _unicast_leftovers(g, alloc, values, delivered)
+                sp.set(bits=bits)
+            with tr.span("phase.reduce"):
+                return _reduce_distributed(program, g, alloc, values,
+                                           delivered, state), bits
         raise ValueError(f"unknown mode {self.mode!r}")
 
     def run(self, iters: int, state: np.ndarray | None = None, *,
@@ -443,33 +463,42 @@ class CompiledEngine:
         if fault_schedule is not None:
             from .faults import FaultLog
             log = FaultLog()
-        for it in range(start_iter, start_iter + iters):
-            if fault_schedule is not None:
-                cur, crashed = self._apply_events(
-                    cur, fault_schedule.at(it), failed, straggling, log)
-                crash_pending |= crashed
-            state, bits = cur._step(state)
-            B = 1 if state.ndim == 1 else state.shape[1]
-            if straggling and cur.mode in ("coded", "coded-fast"):
-                from .faults import _straggler_bits_plan
-                bits = _straggler_bits_plan(
-                    cur.plan, tuple(sorted(straggling))) * B
-                if cur.mode == "coded":
-                    bits += cur.plan.leftover_bits * B
-            if log is not None and straggling:
-                log.straggled_iters += 1
-            if cur.recovery is not None:
-                bits += cur.recovery.handover_bits * B
-                if log is not None:
-                    log.handover_bits += cur.recovery.handover_bits * B
-            if crash_pending:
-                log.recovery_bits += bits
-                crash_pending = False
-            total_bits += bits
-            if checkpoint is not None and (
-                    (it + 1 - start_iter) % max(checkpoint_every, 1) == 0
-                    or it == start_iter + iters - 1):
-                checkpoint.save(it + 1, state, total_bits, cur.alloc)
+        tr = get_tracer()
+        B0 = 1 if state.ndim == 1 else state.shape[1]
+        with tr.span("engine.run", mode=self.mode, backend=self.backend,
+                     iters=iters, B=B0) as run_sp:
+            for it in range(start_iter, start_iter + iters):
+                with tr.span("engine.iteration", iteration=it) as it_sp:
+                    if fault_schedule is not None:
+                        cur, crashed = self._apply_events(
+                            cur, fault_schedule.at(it), failed, straggling,
+                            log)
+                        crash_pending |= crashed
+                    state, bits = cur._step(state)
+                    B = 1 if state.ndim == 1 else state.shape[1]
+                    if straggling and cur.mode in ("coded", "coded-fast"):
+                        from .faults import _straggler_bits_plan
+                        bits = _straggler_bits_plan(
+                            cur.plan, tuple(sorted(straggling))) * B
+                        if cur.mode == "coded":
+                            bits += cur.plan.leftover_bits * B
+                    if log is not None and straggling:
+                        log.straggled_iters += 1
+                    if cur.recovery is not None:
+                        bits += cur.recovery.handover_bits * B
+                        if log is not None:
+                            log.handover_bits += \
+                                cur.recovery.handover_bits * B
+                    if crash_pending:
+                        log.recovery_bits += bits
+                        crash_pending = False
+                    total_bits += bits
+                    it_sp.set(bits=bits)
+                    if checkpoint is not None and (
+                            (it + 1 - start_iter) % max(checkpoint_every, 1)
+                            == 0 or it == start_iter + iters - 1):
+                        checkpoint.save(it + 1, state, total_bits, cur.alloc)
+            run_sp.set(shuffle_bits=total_bits - start_bits)
         return EngineResult(state, start_iter + iters, total_bits, self.mode,
                             faults=log)
 

@@ -50,6 +50,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels.xor_code import ops as xor_ops
 from ..launch.mesh import make_servers_mesh, shard_map_compat
+from ..obs import get_tracer
 from .allocation import Allocation
 from .bitcodec import floats_to_words, words_to_floats
 from .graph_models import CSR, Graph
@@ -343,26 +344,42 @@ class FusedSparseShuffle:
         unbatched exchange of that column.
         """
         s = self.sched
+        tr = get_tracer()
         ew = np.ascontiguousarray(edge_words, np.uint32)
         batched = ew.ndim == 2
-        if batched:
-            if self._fn_batched is None:
-                self._fn_batched = self._build(self._encode, self._interpret,
-                                               batched=True)
-            ew = np.concatenate(
-                [ew, np.zeros((1, ew.shape[1]), np.uint32)], axis=0)
-            loc = np.zeros((s.K, s.Lmax + 1, ew.shape[1]), dtype=np.uint32)
-            fn = self._fn_batched
-        else:
-            ew = np.append(ew, np.uint32(0))
-            loc = np.zeros((s.K, s.Lmax + 1), dtype=np.uint32)
-            fn = self._fn
-        loc[:, :s.Lmax] = ew[s.loc_e]
-        out = np.asarray(fn(jnp.asarray(loc), *self._dev_tables))
+        B = int(ew.shape[1]) if batched else 1
+        with tr.span("phase.encode", backend="fused", B=B,
+                     nnz=int(edge_words.shape[0])):
+            if batched:
+                if self._fn_batched is None:
+                    self._fn_batched = self._build(self._encode,
+                                                   self._interpret,
+                                                   batched=True)
+                ew = np.concatenate(
+                    [ew, np.zeros((1, ew.shape[1]), np.uint32)], axis=0)
+                loc = np.zeros((s.K, s.Lmax + 1, ew.shape[1]),
+                               dtype=np.uint32)
+                fn = self._fn_batched
+            else:
+                ew = np.append(ew, np.uint32(0))
+                loc = np.zeros((s.K, s.Lmax + 1), dtype=np.uint32)
+                fn = self._fn
+            loc[:, :s.Lmax] = ew[s.loc_e]
         plan = self.plan
-        M = plan.all_k.size
-        return out[plan.all_k, np.arange(M, dtype=np.int64)
-                   - plan.ptr[plan.all_k]]
+        bits = (plan.coded_bits + plan.leftover_bits) * B
+        # Host-side timing around the jitted multi-device exchange: block
+        # on the device buffers before stamping so the span covers the
+        # collective's execution, not just its dispatch.
+        with tr.span("phase.exchange", backend="fused", bits=bits, B=B,
+                     K=s.K):
+            dev = fn(jnp.asarray(loc), *self._dev_tables)
+            jax.block_until_ready(dev)
+        with tr.span("phase.decode", backend="fused", B=B,
+                     deliveries=int(plan.all_k.size)):
+            out = np.asarray(dev)
+            M = plan.all_k.size
+            return out[plan.all_k, np.arange(M, dtype=np.int64)
+                       - plan.ptr[plan.all_k]]
 
     def execute(self, edge_vals: np.ndarray) -> PlanShuffleResult:
         """Drop-in peer of `ShufflePlan.execute_coded_sparse` (batched

@@ -46,6 +46,7 @@ import functools
 
 import numpy as np
 
+from ..obs import get_tracer
 from .allocation import Allocation
 from .bitcodec import (T_BITS, floats_to_words, segment_bounds, segment_words,
                        words_to_floats)
@@ -265,40 +266,55 @@ class ShufflePlan:
         bits-on-the-wire are exactly B x the schedule bits.
         """
         batched = pair_vals.ndim == 2
-        slotw = self._slot_words(pair_vals)
-        if backend == "numpy":
-            coded = np.bitwise_xor.reduce(slotw, axis=1)
-            # Receiver's strip = XOR of the other slots (locally
-            # recomputable: it Mapped those batches).
-            strip = coded[:, None] ^ slotw
-        elif backend in ("xor-kernel", "xor-ref"):
-            from ..kernels.xor_code import ops as xor_ops
-            use_kernel = backend == "xor-kernel"
-            coded = np.asarray(xor_ops.xor_encode_columns(
-                slotw, use_kernel=use_kernel, interpret=interpret))
-            strip = np.asarray(xor_ops.xor_strip_columns(
-                slotw, use_kernel=use_kernel, interpret=interpret))
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
-        mask = self.slot_mask[..., None] if batched else self.slot_mask
-        seg_shift = (self.seg_shift[None, :, None] if batched
-                     else self.seg_shift[None, :])
-        rec = (coded[:, None] ^ strip) & mask
-        # Gather each pair's r recovered segments and shift them into place.
-        segs = rec[self.pair_col, self.pair_slot] >> seg_shift
-        pair_words = np.bitwise_or.reduce(segs, axis=1)
-        out = np.empty((self.all_k.size,) + pair_vals.shape[1:],
-                       dtype=np.float32)
-        out[self.pos_covered] = words_to_floats(pair_words)
-        out[self.pos_left] = left_vals
-        bits = (self.coded_bits + self.leftover_bits) * _batch_width(out)
+        tr = get_tracer()
+        B = int(pair_vals.shape[1]) if batched else 1
+        with tr.span("phase.encode", backend=backend, B=B,
+                     words=int(self.col_width.size)):
+            slotw = self._slot_words(pair_vals)
+            if backend == "numpy":
+                coded = np.bitwise_xor.reduce(slotw, axis=1)
+                # Receiver's strip = XOR of the other slots (locally
+                # recomputable: it Mapped those batches).
+                strip = coded[:, None] ^ slotw
+            elif backend in ("xor-kernel", "xor-ref"):
+                from ..kernels.xor_code import ops as xor_ops
+                use_kernel = backend == "xor-kernel"
+                coded = np.asarray(xor_ops.xor_encode_columns(
+                    slotw, use_kernel=use_kernel, interpret=interpret))
+                strip = np.asarray(xor_ops.xor_strip_columns(
+                    slotw, use_kernel=use_kernel, interpret=interpret))
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
+        bits = (self.coded_bits + self.leftover_bits) * B
+        # In-process execution moves no real bytes, so the exchange span is
+        # an instant stamp carrying the schedule's bits-on-the-wire; the
+        # fused backend times an actual multi-device collective here.
+        with tr.span("phase.exchange", bits=bits, B=B,
+                     words=int(coded.shape[0])):
+            pass
+        with tr.span("phase.decode", B=B, pairs=int(self.pair_k.size)):
+            mask = self.slot_mask[..., None] if batched else self.slot_mask
+            seg_shift = (self.seg_shift[None, :, None] if batched
+                         else self.seg_shift[None, :])
+            rec = (coded[:, None] ^ strip) & mask
+            # Gather each pair's r recovered segments and shift into place.
+            segs = rec[self.pair_col, self.pair_slot] >> seg_shift
+            pair_words = np.bitwise_or.reduce(segs, axis=1)
+            out = np.empty((self.all_k.size,) + pair_vals.shape[1:],
+                           dtype=np.float32)
+            out[self.pos_covered] = words_to_floats(pair_words)
+            out[self.pos_left] = left_vals
         return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
                                  self.ptr, bits, self.n)
 
     def _direct_result(self, vals: np.ndarray, bits: int) -> PlanShuffleResult:
         out = np.ascontiguousarray(vals, np.float32)
+        total = bits * _batch_width(out)
+        with get_tracer().span("phase.exchange", bits=total,
+                               B=_batch_width(out), values=int(out.shape[0])):
+            pass
         return PlanShuffleResult(self.all_k, self.all_i, self.all_j, out,
-                                 self.ptr, bits * _batch_width(out), self.n)
+                                 self.ptr, total, self.n)
 
     def execute_fast(self, values: np.ndarray) -> PlanShuffleResult:
         """Coded loads with direct value movement (legacy "coded-fast")."""
@@ -428,6 +444,14 @@ class ShufflePlan:
         repairing an already-degraded (plan, alloc) treats every server with
         an empty Map row as dead when choosing stand-ins.
         """
+        with get_tracer().span(
+                "plan.repair",
+                failed=",".join(str(f) for f in sorted(
+                    {int(f) for f in np.atleast_1d(np.asarray(failed))}))) \
+                as rsp:
+            return self._repair(csr, alloc, failed, rsp)
+
+    def _repair(self, csr: CSR, alloc: Allocation, failed, rsp):
         from .faults import RepairStats, degrade_allocation
 
         self._require_schedule()
@@ -482,6 +506,9 @@ class ShufflePlan:
                             remapped_vertices=dstats.remapped_vertices,
                             handover_bits=handover_bits,
                             demoted_pairs=demoted)
+        _stamp_plan(rsp, plan, int(csr.nnz))
+        rsp.set(handover_bits=handover_bits, demoted_pairs=demoted,
+                remapped_vertices=dstats.remapped_vertices)
         return plan, degraded, stats
 
 
@@ -518,10 +545,13 @@ def compile_plan(adj: np.ndarray, alloc: Allocation,
     pass below only consumes (row, column) streams, and `np.nonzero(adj)`
     order is exactly the canonical CSR entry order.
     """
-    ii, jj = np.nonzero(adj)
-    plan = _compile_edges(ii, jj, alloc, schedule)
-    if validate:
-        _validate(plan, adj, alloc)
+    with get_tracer().span("plan.compile", entry="dense", n=alloc.n,
+                           K=alloc.K, r=alloc.r) as sp:
+        ii, jj = np.nonzero(adj)
+        plan = _compile_edges(ii, jj, alloc, schedule)
+        if validate:
+            _validate(plan, adj, alloc)
+        _stamp_plan(sp, plan, int(ii.size))
     return plan
 
 
@@ -541,10 +571,21 @@ def compile_plan_csr(csr: CSR, alloc: Allocation,
             f"graph has n={csr.n} vertices but the allocation expects "
             f"n={alloc.n}; pad the graph with virtual isolated vertices "
             f"first (Graph.padded / er_allocation(..., pad=True))")
-    plan = _compile_edges(csr.rows, csr.indices, alloc, schedule)
-    if validate:
-        _validate_csr(plan, csr, alloc)
+    with get_tracer().span("plan.compile", entry="csr", n=alloc.n,
+                           K=alloc.K, r=alloc.r) as sp:
+        plan = _compile_edges(csr.rows, csr.indices, alloc, schedule)
+        if validate:
+            _validate_csr(plan, csr, alloc)
+        _stamp_plan(sp, plan, int(csr.nnz))
     return plan
+
+
+def _stamp_plan(sp, plan: ShufflePlan, edges: int) -> None:
+    """Attach plan-size attributes to a compile/repair span."""
+    sp.set(edges=edges, deliveries=int(plan.all_k.size),
+           pairs=int(plan.pair_k.size), leftovers=int(plan.left_k.size))
+    if plan.has_schedule:
+        sp.set(columns=int(plan.col_width.size), coded_bits=plan.coded_bits)
 
 
 def _compile_edges(ii: np.ndarray, jj: np.ndarray, alloc: Allocation,

@@ -1,0 +1,26 @@
+"""Observability: phase tracing, metrics, and shared benchmark timing.
+
+Zero-dependency (stdlib-only) on purpose — ``core/`` imports this and
+must stay importable without jax.  Three pieces:
+
+* :mod:`repro.obs.trace` — nestable spans with a no-op disabled path,
+  Chrome-trace/perfetto export, deterministic span trees.
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket histograms
+  with a Prometheus-text exporter; backs ``serve.ServeStats``.
+* :mod:`repro.obs.bench` — the one warmup + R-reps timing helper all
+  ``benchmarks/*.py`` records flow through.
+
+Enable tracing either with ``REPRO_TRACE=1`` in the environment or
+``obs.get_tracer().enable()`` at runtime.
+"""
+from .bench import Measurement, measure, stopwatch, timeit
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      default_latency_buckets, get_registry, set_registry)
+from .trace import Span, Tracer, get_tracer, set_tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Measurement", "MetricsRegistry",
+    "Span", "Tracer", "default_latency_buckets", "get_registry",
+    "get_tracer", "measure", "set_registry", "set_tracer", "stopwatch",
+    "timeit",
+]

@@ -37,7 +37,6 @@ recoveries) next to the throughput counters.
 from __future__ import annotations
 
 import collections
-import dataclasses
 import threading
 import time
 from concurrent.futures import Future
@@ -48,21 +47,109 @@ from ..core import algorithms, engine
 from ..core.allocation import Allocation
 from ..core.graph_models import Graph
 from ..core.shuffle_plan import ShufflePlan
+from ..obs import MetricsRegistry, get_tracer
 
 QUERY_KINDS = ("sssp", "ppr")
 
 
-@dataclasses.dataclass
 class ServeStats:
-    """Counters over the service's lifetime (read them after `close`)."""
-    queries: int = 0             # queries resolved successfully
-    batches: int = 0             # successful batched runs (incl. retry halves)
-    shuffle_bits: int = 0        # total over all successful runs
-    failed_queries: int = 0      # futures failed with the query's own error
-    expired_queries: int = 0     # deadline lapsed while queued
-    retries: int = 0             # bisection re-runs after a batch failure
-    crashes: int = 0             # fault-schedule crash events applied
-    recoveries: int = 0          # fault-schedule recover events applied
+    """Service-lifetime counters, backed by an `obs.MetricsRegistry`.
+
+    Reads keep the plain-attribute API (`stats.queries`, `stats.retries`,
+    ...) but every counter lives in the registry under a `serve_*` metric
+    name, so `stats.to_prometheus_text()` exposes the whole set - plus the
+    per-query latency histogram (submit -> future resolution) behind
+    `latency_p50` / `latency_p95` / `latency_p99`.
+
+    All mutation goes through the `record_*` methods so each fact is
+    counted in exactly one place - in particular `record_success` is the
+    ONLY place `shuffle_bits` and `queries` grow, which is what keeps
+    `bits_per_query` consistent under bisection retries (each successful
+    half-batch run is counted exactly once; failed runs add nothing).
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._queries = r.counter(
+            "serve_queries_total", "queries resolved successfully")
+        self._batches = r.counter(
+            "serve_batches_total",
+            "successful batched runs (incl. retry halves)")
+        self._bits = r.counter(
+            "serve_shuffle_bits_total", "shuffle bits over successful runs")
+        self._failed = r.counter(
+            "serve_failed_queries_total",
+            "futures failed with the query's own error")
+        self._expired = r.counter(
+            "serve_expired_queries_total", "deadline lapsed while queued")
+        self._retries = r.counter(
+            "serve_retries_total", "bisection re-runs after a batch failure")
+        self._crashes = r.counter(
+            "serve_crashes_total", "fault-schedule crash events applied")
+        self._recoveries = r.counter(
+            "serve_recoveries_total", "fault-schedule recover events applied")
+        self._latency = r.histogram(
+            "serve_query_latency_seconds",
+            "submit-to-resolution latency of successful queries")
+
+    # -- mutation (one method per fact) ---------------------------------
+    def record_success(self, queries: int, shuffle_bits: int,
+                       latencies_s=()) -> None:
+        """One successful (sub-)batch run: its queries, its bits, once."""
+        self._queries.inc(queries)
+        self._batches.inc()
+        self._bits.inc(shuffle_bits)
+        for s in latencies_s:
+            self._latency.observe(s)
+
+    def record_failed(self) -> None:
+        self._failed.inc()
+
+    def record_expired(self) -> None:
+        self._expired.inc()
+
+    def record_retries(self, count: int) -> None:
+        self._retries.inc(count)
+
+    def record_crash(self) -> None:
+        self._crashes.inc()
+
+    def record_recovery(self) -> None:
+        self._recoveries.inc()
+
+    # -- reads (back-compat attribute API) ------------------------------
+    @property
+    def queries(self) -> int:
+        return int(self._queries.value)
+
+    @property
+    def batches(self) -> int:
+        return int(self._batches.value)
+
+    @property
+    def shuffle_bits(self) -> int:
+        return int(self._bits.value)
+
+    @property
+    def failed_queries(self) -> int:
+        return int(self._failed.value)
+
+    @property
+    def expired_queries(self) -> int:
+        return int(self._expired.value)
+
+    @property
+    def retries(self) -> int:
+        return int(self._retries.value)
+
+    @property
+    def crashes(self) -> int:
+        return int(self._crashes.value)
+
+    @property
+    def recoveries(self) -> int:
+        return int(self._recoveries.value)
 
     @property
     def mean_batch(self) -> float:
@@ -72,6 +159,31 @@ class ServeStats:
     @property
     def bits_per_query(self) -> float:
         return self.shuffle_bits / self.queries if self.queries else 0.0
+
+    @property
+    def latency_p50(self) -> float:
+        return self._latency.quantile(0.50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self._latency.quantile(0.95)
+
+    @property
+    def latency_p99(self) -> float:
+        return self._latency.quantile(0.99)
+
+    def latency_percentiles(self) -> dict:
+        return self._latency.percentiles((50, 95, 99))
+
+    def to_prometheus_text(self) -> str:
+        return self.registry.to_prometheus_text()
+
+    def __repr__(self) -> str:
+        return (f"ServeStats(queries={self.queries}, batches={self.batches}, "
+                f"shuffle_bits={self.shuffle_bits}, "
+                f"failed={self.failed_queries}, "
+                f"expired={self.expired_queries}, retries={self.retries}, "
+                f"crashes={self.crashes}, recoveries={self.recoveries})")
 
 
 class GraphService:
@@ -95,7 +207,7 @@ class GraphService:
                  backend: str = "numpy", max_batch: int = 8,
                  max_wait_s: float = 0.005, plan: ShufflePlan | None = None,
                  backend_opts: dict | None = None, fault_schedule=None,
-                 **opts):
+                 registry: MetricsRegistry | None = None, **opts):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
         merged = dict(backend_opts or {})
@@ -108,7 +220,7 @@ class GraphService:
             backend=backend, plan=plan, backend_opts=merged)
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
-        self.stats = ServeStats()
+        self.stats = ServeStats(registry)
         self._fault_schedule = fault_schedule
         self._fault_idx = 0
         self._batch_no = 0                    # admitted-batch boundary clock
@@ -148,13 +260,13 @@ class GraphService:
         else:
             raise ValueError(
                 f"unknown query kind {kind!r}; accepted: {QUERY_KINDS}")
-        deadline = (None if deadline_s is None
-                    else time.monotonic() + float(deadline_s))
+        now = time.monotonic()
+        deadline = None if deadline_s is None else now + float(deadline_s)
         fut: Future = Future()
         with self._cv:
             if self._closed:
                 raise RuntimeError("service is closed")
-            self._lanes[(kind, int(iters))].append((arg, fut, deadline))
+            self._lanes[(kind, int(iters))].append((arg, fut, deadline, now))
             self._cv.notify_all()
         return fut
 
@@ -175,7 +287,7 @@ class GraphService:
             return
         with self._cv:
             self._closed = True
-            pending = [f for q in self._lanes.values() for _, f, _ in q]
+            pending = [f for q in self._lanes.values() for _, f, _, _ in q]
             self._lanes.clear()
             self._cv.notify_all()
         for f in pending:
@@ -198,7 +310,7 @@ class GraphService:
             # to the admitted-but-unresolved batch as well as the queues.
             with self._cv:
                 self._closed = True
-                pending = [f for q in self._lanes.values() for _, f, _ in q]
+                pending = [f for q in self._lanes.values() for _, f, _, _ in q]
                 pending += self._inflight
                 self._lanes.clear()
                 self._inflight = []
@@ -234,7 +346,7 @@ class GraphService:
                          for _ in range(min(self.max_batch, len(q)))]
                 if not q:
                     del self._lanes[lane]
-                self._inflight = [f for _, f, _ in batch]
+                self._inflight = [f for _, f, _, _ in batch]
             if batch:
                 self._run_batch(lane, batch)
             with self._cv:
@@ -256,14 +368,12 @@ class GraphService:
                     self._failed |= new
                     self._straggling -= new
                     changed = True
-                    with self._cv:
-                        self.stats.crashes += 1
+                    self.stats.record_crash()
             elif ev.kind == "recover":
                 if new & self._failed:
                     self._failed -= new
                     changed = True
-                    with self._cv:
-                        self.stats.recoveries += 1
+                    self.stats.record_recovery()
                 self._straggling -= new
             else:                             # "straggle"
                 self._straggling |= new - self._failed
@@ -275,49 +385,55 @@ class GraphService:
         kind, iters = lane
         now = time.monotonic()
         live = []
-        for arg, fut, dl in batch:
+        for arg, fut, dl, ts in batch:
             if fut.cancelled():
                 continue
             if dl is not None and now > dl:
-                with self._cv:
-                    self.stats.expired_queries += 1
+                self.stats.record_expired()
                 fut.set_exception(TimeoutError(
                     f"{kind} query expired after waiting past its deadline"))
             else:
-                live.append((arg, fut, dl))
+                live.append((arg, fut, dl, ts))
         if not live:
             return
         self._apply_faults()
         self._batch_no += 1
-        self._execute_split(kind, live, iters)
+        with get_tracer().span("serve.batch", kind=kind, iters=iters,
+                               B=len(live), batch_no=self._batch_no):
+            self._execute_split(kind, live, iters)
 
     def _execute_split(self, kind: str, entries: list, iters: int) -> None:
         """Run one (sub-)batch; on failure bisect and retry each half.
 
         A single poison query therefore reaches a singleton sub-batch after
         O(log B) retries, fails alone (`stats.failed_queries`), and every
-        other future in the original batch still resolves.
+        other future in the original batch still resolves. Bits accounting:
+        `stats.record_success` fires once per *successful* run only - a
+        failed run's bits are never recorded, and each half-batch retry
+        records exactly its own run's bits - so `shuffle_bits` stays
+        consistent with `queries`/`retries` no matter how deep the
+        bisection goes.
         """
-        futs = [f for _, f, _ in entries]
+        futs = [f for _, f, _, _ in entries]
         try:
-            res = self._execute(kind, [a for a, _, _ in entries], iters)
+            res = self._execute(kind, [a for a, _, _, _ in entries], iters)
         except Exception as e:
             if len(entries) == 1:
-                with self._cv:
-                    self.stats.failed_queries += 1
+                self.stats.record_failed()
                 if not futs[0].cancelled():
                     futs[0].set_exception(e)
                 return
             mid = len(entries) // 2
-            with self._cv:
-                self.stats.retries += 2
-            self._execute_split(kind, entries[:mid], iters)
-            self._execute_split(kind, entries[mid:], iters)
+            self.stats.record_retries(2)
+            with get_tracer().span("serve.retry", kind=kind,
+                                   B=len(entries)):
+                self._execute_split(kind, entries[:mid], iters)
+                self._execute_split(kind, entries[mid:], iters)
             return
-        with self._cv:
-            self.stats.queries += len(entries)
-            self.stats.batches += 1
-            self.stats.shuffle_bits += res.shuffle_bits
+        done = time.monotonic()
+        self.stats.record_success(
+            len(entries), res.shuffle_bits,
+            [done - ts for _, _, _, ts in entries])
         for b, f in enumerate(futs):
             if not f.cancelled():
                 f.set_result(res.state[:, b])

@@ -213,3 +213,77 @@ def test_fault_schedule_crash_recover_through_service():
     assert svc.stats.crashes == 1
     assert svc.stats.recoveries == 1
     assert svc.stats.queries == 6
+
+
+# ---- PR 8: metrics-backed ServeStats ----
+
+def test_bisection_bits_accounting_stays_per_query_exact():
+    """Regression gate (PR 8): under poison-query bisection retries the
+    stats must count each *successful* query's bits exactly once —
+    queries/batches/shuffle_bits only grow in `record_success`, so
+    `bits_per_query` equals the single-query schedule cost no matter how
+    the batch was split."""
+    g, alloc = _case()
+    bits1 = engine.compile(algo.sssp(0), g, alloc, "coded").run(3).shuffle_bits
+
+    svc = GraphService(g, alloc, max_batch=4, max_wait_s=5.0)
+    orig = svc._execute
+    poison_root = 2
+
+    def poisoned(kind, args, iters):
+        if poison_root in args:
+            raise RuntimeError("poison value")
+        return orig(kind, args, iters)
+
+    svc._execute = poisoned
+    futs = [svc.submit("sssp", s, iters=3) for s in range(4)]
+    svc.close()
+    for s, f in enumerate(futs):
+        if s != poison_root:
+            f.result(timeout=5)
+    st = svc.stats
+    # [0,1,2,3] fails -> [0,1] lands, [2,3] fails -> [2] fails alone,
+    # [3] lands: 3 successes over 2 successful sub-batches, 4 retries.
+    assert st.queries == 3
+    assert st.batches == 2
+    assert st.retries == 4
+    assert st.failed_queries == 1
+    assert st.shuffle_bits == 3 * bits1
+    assert st.bits_per_query == bits1
+    assert st.mean_batch == pytest.approx(1.5)
+
+
+def test_servestats_latency_percentiles_and_prometheus_view():
+    g, alloc = _case()
+    with GraphService(g, alloc, max_batch=4, max_wait_s=0.05) as svc:
+        futs = [svc.submit("sssp", s, iters=3) for s in range(8)]
+        for f in futs:
+            f.result(timeout=60)
+    st = svc.stats
+    assert st.registry.get("serve_query_latency_seconds").count == 8
+    assert 0 < st.latency_p50 <= st.latency_p95 <= st.latency_p99
+    assert st.latency_percentiles() == {
+        "p50": st.latency_p50, "p95": st.latency_p95, "p99": st.latency_p99}
+    text = st.to_prometheus_text()
+    assert "serve_queries_total 8" in text
+    assert "serve_query_latency_seconds_count 8" in text
+    assert f"serve_shuffle_bits_total {st.shuffle_bits}" in text
+
+
+def test_servestats_shared_registry_injection():
+    """A caller-supplied MetricsRegistry sees the service's metrics; two
+    default-constructed services never cross-contaminate."""
+    from repro.obs import MetricsRegistry
+
+    g, alloc = _case()
+    reg = MetricsRegistry()
+    with GraphService(g, alloc, max_batch=2, max_wait_s=0.05,
+                      registry=reg) as svc:
+        svc.submit("sssp", 0, iters=2).result(timeout=60)
+    assert reg.get("serve_queries_total").value == 1
+    assert svc.stats.registry is reg
+
+    with GraphService(g, alloc, max_batch=2, max_wait_s=0.05) as other:
+        other.submit("sssp", 1, iters=2).result(timeout=60)
+    assert svc.stats.queries == 1          # untouched by the second service
+    assert other.stats.queries == 1
