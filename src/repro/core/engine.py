@@ -284,6 +284,7 @@ class CompiledEngine:
                        else None)
         self._fused = None
         self.recovery = None                  # faults.RepairStats after fail()
+        self.delta_stats = None               # shuffle_plan.DeltaStats after update()
 
     @property
     def fused(self):
@@ -342,6 +343,52 @@ class CompiledEngine:
                              path=self.path, backend=self.backend, plan=plan,
                              backend_opts=self.backend_opts)
         eng.recovery = rstats
+        return eng
+
+    def update(self, delta) -> "CompiledEngine":
+        """Rebind this session to the mutated graph in O(plan + delta).
+
+        `delta` is a `graphs.EdgeDelta`. The returned session is
+        array-identical to compiling fresh on the mutated graph - the plan
+        is patched by `ShufflePlan.apply_delta` (bitwise-equal schedule),
+        the CSR edge tables are carried forward incrementally (no
+        re-locate), and for backend="fused" the partition tables are
+        rebuilt on the *same* jitted exchange, which re-lowers only if the
+        padded partition shapes actually changed. The new session's
+        `.delta_stats` holds the `DeltaStats`.
+
+        Composes with `fail` both ways: `update` on a degraded session
+        re-patches hand-over senders for the new schedule (its
+        `.recovery.handover_bits` is refreshed), and `fail` on an updated
+        session repairs the updated plan.
+        """
+        if not self.distributed or self.mode not in PLAN_MODES:
+            raise ValueError(
+                "update() needs a distributed plan-mode session "
+                f"(uncoded/coded/coded-fast; got mode={self.mode!r})")
+        with get_tracer().span("engine.update", mode=self.mode,
+                               inserts=delta.num_insert,
+                               deletes=delta.num_delete) as sp:
+            csr2 = self.g.csr.apply_delta(delta)
+            g2 = Graph(model=self.g.model, params=dict(self.g.params),
+                       csr=csr2, dense_limit=self.g.dense_limit)
+            plan2, dstats = self.plan.apply_delta(
+                self.g.csr, self.alloc, delta, csr_new=csr2)
+            eng = CompiledEngine(self.program, g2, self.alloc, self.mode,
+                                 path=self.path, backend=self.backend,
+                                 plan=plan2, backend_opts=self.backend_opts)
+            eng.delta_stats = dstats
+            if self.recovery is not None:
+                eng.recovery = (
+                    dataclasses.replace(self.recovery,
+                                        handover_bits=dstats.handover_bits)
+                    if dstats.schedule_changed else self.recovery)
+            if self._fused is not None:
+                eng._fused = (self._fused if len(delta) == 0
+                              else self._fused.rebind(plan2, csr2,
+                                                      self.alloc))
+            sp.set(schedule_changed=dstats.schedule_changed,
+                   handover_bits=dstats.handover_bits)
         return eng
 
     def _apply_events(self, cur: "CompiledEngine", events,

@@ -291,6 +291,32 @@ class FusedSparseShuffle:
             s.enc_l, s.enc_shift, s.enc_mask, s.dec_s, s.dec_w, s.dec_mask,
             s.dec_shift, s.strip_l, s.strip_shift, s.strip_mask))
 
+    def rebind(self, plan: ShufflePlan, csr: CSR,
+               alloc: Allocation) -> "FusedSparseShuffle":
+        """New exchange bound to a mutated (plan, csr) on this instance's
+        jitted callables.
+
+        `CompiledEngine.update`'s hook: the per-server partition and device
+        tables are rebuilt for the new plan (they index CSR entries, so any
+        real delta moves them), but the traced shard_map exchange, mesh,
+        and backend flags carry over - the tables are jit *arguments*, so
+        XLA re-lowers only if the partition's padded shapes (W, Lmax, Dmax)
+        actually changed, and replays the cached executable otherwise.
+        """
+        ex = object.__new__(FusedSparseShuffle)
+        ex.plan = plan
+        ex.sched = partition_plan(plan, csr, alloc)
+        ex.mesh = self.mesh
+        ex._encode = self._encode
+        ex._interpret = self._interpret
+        ex._fn = self._fn
+        ex._fn_batched = self._fn_batched
+        s = ex.sched
+        ex._dev_tables = tuple(jnp.asarray(a) for a in (
+            s.enc_l, s.enc_shift, s.enc_mask, s.dec_s, s.dec_w, s.dec_mask,
+            s.dec_shift, s.strip_l, s.strip_shift, s.strip_mask))
+        return ex
+
     def _build(self, encode: str, interpret: bool, batched: bool):
         use_kernel = encode == "xor-kernel"
         # Batched payloads append one trailing B axis to every *word* array

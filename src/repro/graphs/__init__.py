@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from ..core.allocation import Allocation, er_allocation
 from ..core.graph_models import Graph
+from .delta import EdgeDelta
 from .io import (fixture_path, load_fixture, load_graph, normalize_edges,
                  read_edge_list, write_edge_list)
 from .samplers import (erdos_renyi, power_law, random_bipartite, sample,
@@ -29,6 +30,7 @@ __all__ = [
     "erdos_renyi", "random_bipartite", "stochastic_block", "power_law",
     "sample", "read_edge_list", "normalize_edges", "load_graph",
     "load_fixture", "fixture_path", "write_edge_list", "allocate",
+    "EdgeDelta",
 ]
 
 

@@ -30,6 +30,12 @@ Hardening (failure semantics, locked by `tests/test_serve.py`):
     future (callers see `CancelledError`, not a hang) while the in-flight
     batch still resolves; if the worker thread dies outside `_run_batch`,
     the error fans out to every queued future.
+  * **live graph mutations** - `update(delta)` queues an `EdgeDelta` and
+    resolves its future at the next batch boundary: the session is rebound
+    incrementally (`CompiledEngine.update`, O(plan + delta), bitwise-equal
+    to a fresh compile) with no serving gap, and a bad delta fails only its
+    own future. Composes with crashes: the degraded session is re-derived
+    from the mutated base.
 
 `ServeStats` counts all of it (failures, expiries, retries, crashes,
 recoveries) next to the throughput counters.
@@ -85,6 +91,8 @@ class ServeStats:
             "serve_expired_queries_total", "deadline lapsed while queued")
         self._retries = r.counter(
             "serve_retries_total", "bisection re-runs after a batch failure")
+        self._mutations = r.counter(
+            "serve_mutations_total", "graph deltas applied to the session")
         self._crashes = r.counter(
             "serve_crashes_total", "fault-schedule crash events applied")
         self._recoveries = r.counter(
@@ -111,6 +119,9 @@ class ServeStats:
 
     def record_retries(self, count: int) -> None:
         self._retries.inc(count)
+
+    def record_mutation(self) -> None:
+        self._mutations.inc()
 
     def record_crash(self) -> None:
         self._crashes.inc()
@@ -142,6 +153,10 @@ class ServeStats:
     @property
     def retries(self) -> int:
         return int(self._retries.value)
+
+    @property
+    def mutations(self) -> int:
+        return int(self._mutations.value)
 
     @property
     def crashes(self) -> int:
@@ -183,7 +198,8 @@ class ServeStats:
                 f"shuffle_bits={self.shuffle_bits}, "
                 f"failed={self.failed_queries}, "
                 f"expired={self.expired_queries}, retries={self.retries}, "
-                f"crashes={self.crashes}, recoveries={self.recoveries})")
+                f"mutations={self.mutations}, crashes={self.crashes}, "
+                f"recoveries={self.recoveries})")
 
 
 class GraphService:
@@ -229,6 +245,7 @@ class GraphService:
         self._active = self.session           # degraded session after crashes
         self._lanes: dict[tuple, collections.deque] = collections.defaultdict(
             collections.deque)
+        self._mutations: collections.deque = collections.deque()
         self._inflight: list[Future] = []
         self._cv = threading.Condition()
         self._closed = False
@@ -270,6 +287,29 @@ class GraphService:
             self._cv.notify_all()
         return fut
 
+    def update(self, delta) -> Future:
+        """Enqueue one `graphs.EdgeDelta`; returns a Future of its
+        `DeltaStats`.
+
+        Mutations are admitted at batch boundaries only, in arrival order:
+        batches already admitted run on the pre-mutation graph, every batch
+        admitted after the future resolves runs on the mutated one. The
+        session swap is the O(delta) incremental path
+        (`CompiledEngine.update` - bitwise-equal to a fresh compile on the
+        mutated graph, fused exchange re-lowered only if the partition
+        shapes moved), so a mutation costs far less than the recompile it
+        replaces. A bad delta (deleting an absent edge, inserting a present
+        one) fails only its own future; the service keeps serving the
+        un-mutated graph.
+        """
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            self._mutations.append((delta, fut))
+            self._cv.notify_all()
+        return fut
+
     def loads(self) -> dict[str, float]:
         """Schedule loads of the underlying session (per payload column)."""
         return self.session.loads()
@@ -288,7 +328,9 @@ class GraphService:
         with self._cv:
             self._closed = True
             pending = [f for q in self._lanes.values() for _, f, _, _ in q]
+            pending += [f for _, f in self._mutations]
             self._lanes.clear()
+            self._mutations.clear()
             self._cv.notify_all()
         for f in pending:
             f.cancel()
@@ -311,8 +353,10 @@ class GraphService:
             with self._cv:
                 self._closed = True
                 pending = [f for q in self._lanes.values() for _, f, _, _ in q]
+                pending += [f for _, f in self._mutations]
                 pending += self._inflight
                 self._lanes.clear()
+                self._mutations.clear()
                 self._inflight = []
                 self._cv.notify_all()
             for f in pending:
@@ -323,10 +367,16 @@ class GraphService:
     def _loop_inner(self) -> None:
         while True:
             with self._cv:
-                while not self._closed and not any(self._lanes.values()):
+                while (not self._closed and not any(self._lanes.values())
+                       and not self._mutations):
                     self._cv.wait()
+                muts = list(self._mutations)
+                self._mutations.clear()
+            if muts:                          # batch boundary: swap session
+                self._apply_mutations(muts)
+            with self._cv:
                 if not any(self._lanes.values()):
-                    if self._closed:
+                    if self._closed and not self._mutations:
                         return
                     continue                  # lanes cleared under us
                 lane = max(self._lanes, key=lambda k: len(self._lanes[k]))
@@ -351,6 +401,33 @@ class GraphService:
                 self._run_batch(lane, batch)
             with self._cv:
                 self._inflight = []
+
+    def _apply_mutations(self, muts: list) -> None:
+        """Apply queued deltas in arrival order, between batches.
+
+        Each delta rebinds the base session via `CompiledEngine.update`;
+        with crashed servers the degraded serving session is re-derived
+        from the updated base, so mutation and repair compose (delta-then-
+        fail == fail-then-delta, the plan-level contract). A poison delta
+        fails only its own future and leaves the session untouched.
+        """
+        for delta, fut in muts:
+            if fut.cancelled():
+                continue
+            try:
+                with get_tracer().span("serve.update",
+                                       inserts=delta.num_insert,
+                                       deletes=delta.num_delete):
+                    session = self.session.update(delta)
+                    self._active = (session if not self._failed
+                                    else session.fail(
+                                        tuple(sorted(self._failed))))
+                    self.session = session
+            except Exception as e:
+                fut.set_exception(e)
+            else:
+                self.stats.record_mutation()
+                fut.set_result(session.delta_stats)
 
     def _apply_faults(self) -> None:
         """Fire every not-yet-applied event at or before this boundary."""

@@ -1,0 +1,419 @@
+"""Incremental O(delta) plan maintenance: `apply_delta` == fresh compile.
+
+The locked contract (PR 9): for any `EdgeDelta`, `ShufflePlan.apply_delta`
+returns a plan *array-identical* to `compile_plan_csr` on the mutated graph
+- every field bitwise equal (dtype, shape, values), edge tables included -
+across all three graph models, insert/delete/mixed batches, scheduled and
+missing-set-only plans, and the unicast-leftover spill. The only documented
+exception: on a *degraded* allocation `col_sender` is re-patched to healthy
+stand-ins (a fresh compile would still point at dead servers), exactly the
+`repair` rule. Delivered words are bitwise equal either way.
+
+Also locks the session layers: `CompiledEngine.update` (bitwise run states,
+stale-cache regressions, composition with `fail` in both orders, fused
+exchange rebind) and `GraphService.update` (mutations admitted between
+batches, poison deltas isolated).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation)
+from repro.core.graph_models import (Graph, csr_from_undirected,
+                                     random_bipartite)
+from repro.core.shuffle_plan import compile_plan_csr
+from repro.graphs import EdgeDelta, erdos_renyi, power_law, stochastic_block
+
+PLAN_FIELDS = ["pair_k", "pair_i", "pair_j", "col_width", "col_sender",
+               "col_gm", "col_rank", "slot_pair", "slot_shift", "slot_mask",
+               "pair_col", "pair_slot", "seg_shift", "left_k", "left_i",
+               "left_j", "all_k", "all_i", "all_j", "pos_covered",
+               "pos_left", "ptr"]
+
+K, R = 5, 2
+N = divisible_n(50, K, R)
+
+
+def assert_plans_equal(a, b, skip=(), ctx=""):
+    for f in PLAN_FIELDS:
+        if f in skip:
+            continue
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None or y is None:
+            assert x is None and y is None, (ctx, f)
+            continue
+        assert x.dtype == y.dtype, (ctx, f, x.dtype, y.dtype)
+        assert x.shape == y.shape, (ctx, f, x.shape, y.shape)
+        assert np.array_equal(x, y), (ctx, f)
+
+
+def mk_delta(g, rng, nins, ndel):
+    """Deterministic mixed batch: existing edges to delete, fresh to insert."""
+    csr = g.csr
+    have = set(zip(csr.rows.tolist(), csr.indices.tolist()))
+    dels = []
+    if ndel and csr.nnz:
+        idx = rng.choice(csr.nnz, size=min(4 * ndel, csr.nnz), replace=False)
+        seen = set()
+        for e in idx:
+            u, v = int(csr.rows[e]), int(csr.indices[e])
+            key = (min(u, v), max(u, v))
+            if key not in seen:
+                seen.add(key)
+                dels.append(key)
+            if len(dels) == ndel:
+                break
+    inss = []
+    seen = set()
+    real_n = g.params.get("padded_from", g.n)
+    while len(inss) < nins:
+        u, v = int(rng.integers(real_n)), int(rng.integers(real_n))
+        if u == v:
+            continue
+        key = (min(u, v), max(u, v))
+        if key in seen or (u, v) in have or (v, u) in have:
+            continue
+        seen.add(key)
+        inss.append(key)
+    return EdgeDelta.for_graph(g, insert=inss, delete=dels)
+
+
+def check_delta_vs_fresh(g, alloc, delta, schedule=True, ctx=""):
+    csr = g.csr
+    plan = compile_plan_csr(csr, alloc, schedule=schedule)
+    plan.edge_tables(csr, alloc)
+    csr2 = csr.apply_delta(delta)
+    plan2, stats = plan.apply_delta(csr, alloc, delta, csr_new=csr2)
+    fresh = compile_plan_csr(csr2, alloc, schedule=schedule)
+    assert_plans_equal(plan2, fresh, ctx=ctx)
+    # Edge tables were carried incrementally AND re-keyed to the new CSR.
+    t2 = plan2.__dict__["_edge_tables"]
+    assert t2[0] is csr2 and t2[1] is alloc
+    ft = fresh.edge_tables(csr2, alloc)
+    for f in ["pair_e", "left_e", "all_e", "gather"]:
+        assert np.array_equal(getattr(t2[2], f), getattr(ft, f)), (ctx, f)
+    return plan2, stats
+
+
+def _models():
+    return [("er", erdos_renyi(N, 0.15, seed=1)),
+            ("pl", power_law(N, 2.5, seed=2)),
+            ("sbm", stochastic_block(N // 2, N - N // 2, 0.3, 0.02, seed=3))]
+
+
+# ---------------------------------------------------------------------------
+# The contract: apply_delta == fresh compile, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["er", "pl", "sbm"])
+@pytest.mark.parametrize("kind,nins,ndel",
+                         [("ins", 8, 0), ("del", 0, 8), ("mix", 6, 6)])
+@pytest.mark.parametrize("sched", [True, False])
+def test_apply_delta_matches_fresh_compile(model, kind, nins, ndel, sched):
+    rng = np.random.default_rng(hash((model, kind, sched)) % 2**32)
+    g = dict(_models())[model]
+    alloc = er_allocation(N, K, R)
+    delta = mk_delta(g, rng, nins, ndel)
+    check_delta_vs_fresh(g, alloc, delta, schedule=sched,
+                         ctx=f"{model}/{kind}/sched={sched}")
+
+
+@pytest.mark.parametrize("model", ["er", "pl", "sbm"])
+def test_noop_delta_is_identity(model):
+    g = dict(_models())[model]
+    alloc = er_allocation(N, K, R)
+    d0 = EdgeDelta.for_graph(g)
+    plan = compile_plan_csr(g.csr, alloc)
+    plan2, st = plan.apply_delta(g.csr, alloc, d0,
+                                 csr_new=g.csr.apply_delta(d0))
+    assert not st.schedule_changed
+    assert_plans_equal(plan2, plan, ctx=f"{model}/noop")
+
+
+def test_apply_delta_segment_fast_path():
+    """K=4 keeps the pair stream in a handful of huge (group, receiver)
+    runs, which flips `_schedule_from_pairs` onto its segment/slice fast
+    path (no index arrays); the bitwise contract must hold there too."""
+    rng = np.random.default_rng(21)
+    n = divisible_n(1000, 4, 2)
+    g = erdos_renyi(n, 10 / n, seed=6)
+    alloc = er_allocation(n, 4, 2)
+    delta = mk_delta(g, rng, 20, 20)
+    p2, _ = check_delta_vs_fresh(g, alloc, delta, ctx="segment-path")
+    assert p2.pair_k.size > 16 * 12 * 6     # big enough to take the path
+
+
+def test_apply_delta_spill_bipartite():
+    """Unicast-leftover spill (0 covered pairs on one side, Appendix A)."""
+    rng = np.random.default_rng(7)
+    gb = random_bipartite(32, 18, 0.3, seed=3)
+    ab = bipartite_allocation(32, 18, 6, 4)
+    db = mk_delta(gb, rng, 4, 4)
+    check_delta_vs_fresh(gb, ab, db, ctx="spill")
+
+
+def test_apply_delta_sequence_matches_fresh():
+    """Successive deltas chain through the plan-level key caches; the end
+    of an update *sequence* must still equal one fresh compile."""
+    rng = np.random.default_rng(11)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    csr = g.csr
+    plan = compile_plan_csr(csr, alloc)
+    plan.edge_tables(csr, alloc)
+    for step in range(4):
+        gv = Graph(model=g.model, params=dict(g.params), csr=csr)
+        delta = mk_delta(gv, rng, 5, 5)
+        csr2 = csr.apply_delta(delta)
+        plan, _ = plan.apply_delta(csr, alloc, delta, csr_new=csr2)
+        csr = csr2
+        assert_plans_equal(plan, compile_plan_csr(csr, alloc),
+                           ctx=f"seq/{step}")
+
+
+def test_delivered_words_bitwise_equal():
+    rng = np.random.default_rng(5)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    d0 = mk_delta(g, rng, 5, 5)
+    c2 = g.csr.apply_delta(d0)
+    p0 = compile_plan_csr(g.csr, alloc)
+    pa, _ = p0.apply_delta(g.csr, alloc, d0)
+    pf = compile_plan_csr(c2, alloc)
+    vals = ((np.arange(N * N, dtype=np.int64) * 2654435761) % 2**32) \
+        .astype(np.uint32).reshape(N, N)
+    ra, rf = pa.execute_coded(vals), pf.execute_coded(vals)
+    for f in dataclasses.fields(ra):
+        x, y = getattr(ra, f.name), getattr(rf, f.name)
+        if isinstance(x, np.ndarray):
+            assert np.array_equal(x, y), f.name
+        else:
+            assert x == y, f.name
+
+
+# ---------------------------------------------------------------------------
+# Composition with repair, both orders
+# ---------------------------------------------------------------------------
+
+
+def test_delta_composes_with_repair_both_ways():
+    rng = np.random.default_rng(3)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    delta = mk_delta(g, rng, 6, 6)
+    csr, csr2 = g.csr, g.csr.apply_delta(delta)
+    plan = compile_plan_csr(csr, alloc)
+    plan.edge_tables(csr, alloc)
+    failed = (1,)
+    rep, degraded, _ = plan.repair(csr, alloc, failed)
+
+    # delta after repair: == fresh on the degraded allocation, except the
+    # re-patched col_sender, which must point only at survivors
+    p_dr, st_dr = rep.apply_delta(csr, degraded, delta, csr_new=csr2)
+    fresh_deg = compile_plan_csr(csr2, degraded)
+    assert_plans_equal(p_dr, fresh_deg, skip=("col_sender",),
+                       ctx="delta-after-repair")
+    surv = np.flatnonzero(degraded.map_sets.any(axis=1))
+    assert np.isin(p_dr.col_sender, surv).all()
+
+    # repair after delta: identical plan, identical hand-over pricing
+    plan2 = compile_plan_csr(csr2, alloc)
+    p_rd, _, st_rd = plan2.repair(csr2, alloc, failed)
+    assert_plans_equal(p_rd, p_dr, ctx="orders-agree")
+    assert st_rd.handover_bits == st_dr.handover_bits
+
+
+# ---------------------------------------------------------------------------
+# CSR.apply_delta and EdgeDelta validation (construction-time errors)
+# ---------------------------------------------------------------------------
+
+
+def test_csr_apply_delta_matches_rebuild():
+    rng = np.random.default_rng(9)
+    g = _models()[1][1]
+    delta = mk_delta(g, rng, 7, 7)
+    csr2 = g.csr.apply_delta(delta)
+    keep = set(zip(g.csr.rows.tolist(), g.csr.indices.tolist()))
+    keep -= {(int(u), int(v)) for u, v in delta.delete}
+    keep -= {(int(v), int(u)) for u, v in delta.delete}
+    keep |= {(int(u), int(v)) for u, v in delta.insert}
+    u = np.array(sorted({(min(a, b), max(a, b)) for a, b in keep}))
+    want = csr_from_undirected(u[:, 0], u[:, 1], g.n)
+    for f in ("indptr", "indices", "rows"):
+        got, exp = getattr(csr2, f), getattr(want, f)
+        assert got.dtype == exp.dtype and np.array_equal(got, exp), f
+
+
+def test_csr_apply_delta_rejects_absent_and_present_edges():
+    g = _models()[0][1]
+    u, v = int(g.csr.rows[0]), int(g.csr.indices[0])
+    with pytest.raises(ValueError, match="already in the graph"):
+        g.csr.apply_delta(EdgeDelta.for_graph(g, insert=[(u, v)]))
+    absent = None
+    have = set(zip(g.csr.rows.tolist(), g.csr.indices.tolist()))
+    for a in range(g.n):
+        for b in range(a + 1, g.n):
+            if (a, b) not in have:
+                absent = (a, b)
+                break
+        if absent:
+            break
+    with pytest.raises(ValueError, match="not in the graph"):
+        g.csr.apply_delta(EdgeDelta.for_graph(g, delete=[absent]))
+
+
+def test_edge_delta_validation_errors():
+    g = _models()[0][1]
+    n = g.n
+    with pytest.raises(ValueError, match="out of range"):
+        EdgeDelta.for_graph(g, insert=[(0, n)])
+    with pytest.raises(ValueError, match="out of range"):
+        EdgeDelta.for_graph(g, delete=[(-1, 3)])
+    with pytest.raises(ValueError, match="self-loop"):
+        EdgeDelta.for_graph(g, insert=[(4, 4)])
+    with pytest.raises(ValueError, match="more than once"):
+        EdgeDelta.for_graph(g, insert=[(1, 2), (2, 1)])
+    with pytest.raises(ValueError, match="both insert and delete"):
+        EdgeDelta(insert=[(1, 2)], delete=[(2, 1)], n=n)
+    with pytest.raises(ValueError, match="pairs"):
+        EdgeDelta(insert=[(1, 2, 3)], delete=[], n=n)
+    with pytest.raises(ValueError, match="integer"):
+        EdgeDelta(insert=[(1.5, 2.5)], delete=[], n=n)
+
+
+def test_edge_delta_rejects_virtual_padded_range():
+    """Padding works because virtual vertices stay isolated; a delta must
+    not be able to break that invariant (satellite: clear error, not a
+    mis-bound plan)."""
+    g = _models()[0][1]
+    alloc6 = er_allocation(g.n, 6, 2, pad=True)
+    gp = g.padded(alloc6.n)
+    assert gp.params["padded_from"] == g.n
+    with pytest.raises(ValueError, match="virtual padded range"):
+        EdgeDelta.for_graph(gp, insert=[(0, gp.n - 1)])
+    # real-range mutations on the padded graph still work end to end
+    rng = np.random.default_rng(1)
+    delta = mk_delta(gp, rng, 3, 3)
+    check_delta_vs_fresh(gp, alloc6, delta, ctx="padded")
+
+
+# ---------------------------------------------------------------------------
+# CompiledEngine.update: session-level bitwise + stale-cache regressions
+# ---------------------------------------------------------------------------
+
+
+def _fresh_graph(g, delta):
+    return Graph(model=g.model, params=dict(g.params),
+                 csr=g.csr.apply_delta(delta))
+
+
+@pytest.mark.parametrize("prog_name", ["pagerank", "sssp"])
+@pytest.mark.parametrize("mode", ["coded", "uncoded"])
+def test_engine_update_matches_fresh_session(prog_name, mode):
+    rng = np.random.default_rng(13)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    delta = mk_delta(g, rng, 6, 6)
+    prog = algo.pagerank() if prog_name == "pagerank" else algo.sssp(0)
+    eng = engine.compile(prog, g, alloc, mode, path="sparse")
+    eng2 = eng.update(delta)
+    fresh = engine.compile(prog, _fresh_graph(g, delta), alloc, mode,
+                           path="sparse")
+    r_upd, r_fresh = eng2.run(8), fresh.run(8)
+    assert np.array_equal(r_upd.state, r_fresh.state)
+    assert r_upd.shuffle_bits == r_fresh.shuffle_bits
+    assert eng2.delta_stats is not None
+
+
+def test_engine_update_requires_plan_mode():
+    g = _models()[0][1]
+    eng = engine.compile(algo.pagerank(), g, None, "single", path="sparse")
+    with pytest.raises(ValueError, match="plan-mode"):
+        eng.update(EdgeDelta.for_graph(g))
+
+
+def test_engine_update_leaves_old_session_usable():
+    """Stale-cache regression: the pre-update session keeps its own plan,
+    tables, and graph binding - updating must not mutate it."""
+    rng = np.random.default_rng(17)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    prog = algo.pagerank()
+    eng = engine.compile(prog, g, alloc, "coded", path="sparse")
+    before = eng.run(6).state
+    old_plan, old_tables, old_gather = \
+        eng.plan, eng.tables, eng.tables.gather.copy()
+    eng2 = eng.update(mk_delta(g, rng, 6, 6))
+    # new session got NEW artifacts...
+    assert eng2.plan is not old_plan
+    assert eng2.tables is not old_tables
+    assert eng2.g is not eng.g
+    # ...and the old session's are untouched and still run identically
+    assert eng.plan is old_plan and eng.tables is old_tables
+    assert np.array_equal(eng.tables.gather, old_gather)
+    assert np.array_equal(eng.run(6).state, before)
+
+
+def test_engine_update_rebinds_tables_without_relocate():
+    """The updated session's edge tables must be keyed to the *new* CSR
+    (identity, not equality - the stale-cache failure mode is a table
+    silently bound to the old CSR)."""
+    rng = np.random.default_rng(19)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    eng = engine.compile(algo.pagerank(), g, alloc, "coded", path="sparse")
+    eng2 = eng.update(mk_delta(g, rng, 5, 5))
+    cached = eng2.plan.__dict__["_edge_tables"]
+    assert cached[0] is eng2.g.csr and cached[1] is alloc
+    assert cached[2] is eng2.tables
+
+
+def test_service_update_applies_between_batches():
+    """`GraphService.update`: mutation futures resolve with DeltaStats at
+    the next batch boundary, post-mutation queries answer on the mutated
+    graph (bitwise vs a fresh session), and a poison delta fails only its
+    own future."""
+    from repro.serve import GraphService
+
+    rng = np.random.default_rng(29)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    delta = mk_delta(g, rng, 5, 5)
+    g2 = _fresh_graph(g, delta)
+    want_before = engine.compile(algo.sssp(0), g, alloc, "coded",
+                                 path="sparse").run(6).state
+    want_after = engine.compile(algo.sssp(0), g2, alloc, "coded",
+                                path="sparse").run(6).state
+    with GraphService(g, alloc, max_batch=2, max_wait_s=0.02) as svc:
+        assert np.array_equal(
+            svc.submit("sssp", 0, iters=6).result(timeout=60), want_before)
+        stats = svc.update(delta).result(timeout=60)
+        assert stats.schedule_changed
+        # a poison delta (re-deleting an already-deleted edge) fails alone
+        with pytest.raises(ValueError, match="not in the graph"):
+            svc.update(EdgeDelta.for_graph(
+                g2, delete=[delta.delete[0]])).result(timeout=60)
+        assert np.array_equal(
+            svc.submit("sssp", 0, iters=6).result(timeout=60), want_after)
+        assert svc.stats.mutations == 1
+
+
+def test_engine_update_then_fail_equals_fail_then_update():
+    rng = np.random.default_rng(23)
+    g = _models()[0][1]
+    alloc = er_allocation(N, K, R)
+    delta = mk_delta(g, rng, 6, 6)
+    prog = algo.pagerank()
+    eng = engine.compile(prog, g, alloc, "coded", path="sparse")
+    e_uf = eng.update(delta).fail((1,))
+    e_fu = eng.fail((1,)).update(delta)
+    assert_plans_equal(e_uf.plan, e_fu.plan, ctx="update/fail-orders")
+    assert e_uf.recovery.handover_bits == e_fu.recovery.handover_bits
+    s_uf, s_fu = e_uf.run(5), e_fu.run(5)
+    assert np.array_equal(s_uf.state, s_fu.state)
+    assert s_uf.shuffle_bits == s_fu.shuffle_bits

@@ -8,6 +8,7 @@ pytest.importorskip(
 from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
+from test_delta_plan import check_delta_vs_fresh, mk_delta
 from test_schedule_invariants import (check_plan_csr_identity,
                                       check_schedule_complete,
                                       check_sparse_dense_delivery_equal,
@@ -152,6 +153,29 @@ def test_graph_models_are_simple_undirected(model, seed):
     assert not g.adj.diagonal().any()
     if model == "rb":
         assert not g.adj[:24, :24].any() and not g.adj[24:, 24:].any()
+
+
+@st.composite
+def graph_alloc_deltas(draw):
+    """(graph, allocation, EdgeDelta) draws for the incremental-maintenance
+    contract: random insert/delete batches (including empty and one-sided
+    ones) over the same allocation families as `graph_allocs`."""
+    g, alloc = draw(graph_allocs())
+    rng = np.random.default_rng(draw(st.integers(0, 10_000)))
+    nins = draw(st.integers(0, 6))
+    ndel = draw(st.integers(0, 6))
+    return g, alloc, mk_delta(g, rng, nins, ndel)
+
+
+@given(graph_alloc_deltas(), st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_apply_delta_bitwise_identity_property(case, sched):
+    """PR 9 tentpole gate: for random (graph, alloc, delta) draws,
+    `ShufflePlan.apply_delta` is bitwise-identical to a fresh
+    `compile_plan_csr` of the mutated graph - every plan field and the
+    carried edge tables."""
+    g, alloc, delta = case
+    check_delta_vs_fresh(g, alloc, delta, schedule=sched, ctx="property")
 
 
 @st.composite

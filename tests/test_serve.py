@@ -176,6 +176,8 @@ def test_close_nowait_cancels_queued_futures():
         svc.submit("sssp", 0)
 
 
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
 def test_worker_death_fans_exception_to_queued_futures():
     g, alloc = _case()
     svc = GraphService(g, alloc, max_batch=2, max_wait_s=60.0)
