@@ -60,13 +60,15 @@ import dataclasses
 
 import numpy as np
 
+from ..launch.mesh import Topology
 from ..obs import get_tracer
 from .algorithms import VertexProgram
 from .allocation import Allocation
 from .bitcodec import T_BITS
 from .coded_shuffle import run_coded
 from .graph_models import Graph
-from .shuffle_plan import PlanShuffleResult, ShufflePlan, compile_plan_csr
+from .shuffle_plan import (HierarchicalPlan, PlanShuffleResult, ShufflePlan,
+                           compile_hierarchical, compile_plan_csr)
 from .uncoded_shuffle import missing_pairs
 
 PLAN_MODES = ("uncoded", "coded", "coded-fast")
@@ -240,11 +242,40 @@ class CompiledEngine:
     def __init__(self, program: VertexProgram, g: Graph,
                  alloc: Allocation | None, mode: str = "coded", *,
                  path: str = "auto", backend: str = "numpy",
-                 plan: ShufflePlan | None = None,
-                 backend_opts: dict | None = None):
+                 plan: ShufflePlan | HierarchicalPlan | None = None,
+                 backend_opts: dict | None = None,
+                 topology: Topology | None = None):
         backend_opts = dict(backend_opts or {})
         sparse = _use_sparse(program, mode, path)
         _validate_backend_opts(backend, backend_opts)
+        self.hplan = None
+        if isinstance(plan, HierarchicalPlan):
+            if topology is not None and topology != plan.topology:
+                raise ValueError(
+                    f"topology {topology} disagrees with the plan's "
+                    f"{plan.topology}")
+            topology = plan.topology
+            if topology.is_flat:
+                plan = plan.flat              # degenerate: flat session
+            else:
+                self.hplan = plan
+                plan = plan.flat
+        hier = topology is not None and not topology.is_flat
+        if hier:
+            # The hierarchical executor implements the coded sparse Shuffle
+            # only; spmv never executes a Shuffle at all.
+            if mode != "coded" or not sparse:
+                raise ValueError(
+                    "a non-flat topology runs the two-level coded Shuffle: "
+                    f"mode='coded' on the sparse path required (got "
+                    f"mode={mode!r}, path={path!r})")
+            if backend == "spmv":
+                raise ValueError(
+                    "backend='spmv' skips the Shuffle; a non-flat topology "
+                    "needs backend 'numpy' or 'fused'")
+            if alloc is None:
+                raise ValueError("a non-flat topology needs an allocation")
+            topology.check_K(alloc.K)
         if backend == "spmv":
             if not sparse:
                 raise ValueError("backend='spmv' requires the sparse path")
@@ -268,20 +299,32 @@ class CompiledEngine:
         self.path = path                      # as requested ("auto" kept)
         self.backend = backend
         self.backend_opts = backend_opts
+        self.topology = topology
         self.sparse = sparse
         self.distributed = mode != "single" and alloc is not None
         if self.distributed and mode in PLAN_MODES and plan is None:
             # Uncoded only consumes the missing set; skip the column tables.
             # CSR entry point: adjacency-free and schedule-identical to the
             # dense compile, so CSR-native graphs never materialize [n, n].
-            with get_tracer().span("engine.compile", mode=mode,
-                                   backend=backend, n=g.n, K=alloc.K):
-                plan = compile_plan_csr(g.csr, alloc,
-                                        schedule=mode != "uncoded")
+            with get_tracer().span(
+                    "engine.compile", mode=mode, backend=backend, n=g.n,
+                    K=alloc.K,
+                    **({"racks": topology.racks,
+                        "servers_per_rack": topology.servers_per_rack}
+                       if hier else {})):
+                if hier:
+                    self.hplan = compile_hierarchical(g.csr, alloc, topology)
+                    plan = self.hplan.flat
+                else:
+                    plan = compile_plan_csr(g.csr, alloc,
+                                            schedule=mode != "uncoded")
         self.plan = plan
         self.tables = (plan.edge_tables(g.csr, alloc)
                        if sparse and self.distributed and mode in PLAN_MODES
                        else None)
+        self.htables = (self.hplan.edge_tables(g.csr, alloc)
+                        if self.hplan is not None and sparse
+                        and self.distributed else None)
         self._fused = None
         self.recovery = None                  # faults.RepairStats after fail()
         self.delta_stats = None               # shuffle_plan.DeltaStats after update()
@@ -292,8 +335,9 @@ class CompiledEngine:
         (compile-once / execute-many); value- and program-agnostic."""
         if self.backend == "fused" and self._fused is None:
             from .fused_shuffle import FusedSparseShuffle
-            self._fused = FusedSparseShuffle(self.plan, self.g.csr,
-                                             self.alloc, **self.backend_opts)
+            self._fused = FusedSparseShuffle(
+                self.hplan if self.hplan is not None else self.plan,
+                self.g.csr, self.alloc, **self.backend_opts)
         return self._fused
 
     def with_program(self, program: VertexProgram) -> "CompiledEngine":
@@ -303,9 +347,11 @@ class CompiledEngine:
         over verbatim (they never saw the program). This is the serving
         queue's per-batch hook.
         """
-        eng = CompiledEngine(program, self.g, self.alloc, self.mode,
-                             path=self.path, backend=self.backend,
-                             plan=self.plan, backend_opts=self.backend_opts)
+        eng = CompiledEngine(
+            program, self.g, self.alloc, self.mode, path=self.path,
+            backend=self.backend,
+            plan=self.hplan if self.hplan is not None else self.plan,
+            backend_opts=self.backend_opts)
         eng._fused = self._fused
         return eng
 
@@ -339,6 +385,13 @@ class CompiledEngine:
         else:
             plan, degraded, rstats = self.plan.repair(self.g.csr, self.alloc,
                                                       failed)
+            if self.hplan is not None:
+                # Repair keeps the rack structure: the survivors stay in
+                # their racks, so the two-level session recompiles the
+                # hierarchical plan on the degraded allocation (O(edges))
+                # while `rstats` keeps the flat repair's hand-over pricing.
+                plan = compile_hierarchical(self.g.csr, degraded,
+                                            self.topology)
         eng = CompiledEngine(self.program, self.g, degraded, self.mode,
                              path=self.path, backend=self.backend, plan=plan,
                              backend_opts=self.backend_opts)
@@ -374,6 +427,11 @@ class CompiledEngine:
                        csr=csr2, dense_limit=self.g.dense_limit)
             plan2, dstats = self.plan.apply_delta(
                 self.g.csr, self.alloc, delta, csr_new=csr2)
+            if self.hplan is not None:
+                # The flat patch prices the delta (`dstats`); the rack-level
+                # stream can shift arbitrarily under it, so the two-level
+                # session recompiles the hierarchy on the new CSR.
+                plan2 = compile_hierarchical(csr2, self.alloc, self.topology)
             eng = CompiledEngine(self.program, g2, self.alloc, self.mode,
                                  path=self.path, backend=self.backend,
                                  plan=plan2, backend_opts=self.backend_opts)
@@ -448,10 +506,13 @@ class CompiledEngine:
                                                 state, g), 0
             # The executor emits phase.encode / phase.exchange /
             # phase.decode spans itself (it knows words and bits).
-            res = (self.fused.execute(edge_vals)
-                   if self.backend == "fused"
-                   else self.plan.execute_sparse(edge_vals, self.mode,
-                                                 self.tables))
+            if self.backend == "fused":
+                res = self.fused.execute(edge_vals)
+            elif self.hplan is not None:
+                res = self.hplan.execute_coded_sparse(edge_vals, self.htables)
+            else:
+                res = self.plan.execute_sparse(edge_vals, self.mode,
+                                               self.tables)
             with tr.span("phase.reduce", nnz=g.csr.nnz):
                 state = _reduce_sparse(program, g, edge_vals, res,
                                        self.tables.gather, state)
@@ -579,31 +640,40 @@ class CompiledEngine:
             raise ValueError(
                 "loads() needs a compiled plan (a distributed plan mode)")
         from .loads import empirical_loads
-        return empirical_loads(self.plan, self.alloc)
+        return empirical_loads(
+            self.hplan if self.hplan is not None else self.plan, self.alloc,
+            topology=self.topology)
 
 
 def compile(program: VertexProgram, g: Graph, alloc: Allocation | None,
             mode: str = "coded", *, path: str = "auto",
-            backend: str = "numpy", plan: ShufflePlan | None = None,
-            backend_opts: dict | None = None, **opts) -> CompiledEngine:
+            backend: str = "numpy",
+            plan: ShufflePlan | HierarchicalPlan | None = None,
+            backend_opts: dict | None = None,
+            topology: Topology | None = None, **opts) -> CompiledEngine:
     """Compile a reusable execution session (see `CompiledEngine`).
 
     Backend options may be passed inline (``compile(..., backend="spmv",
     bm=256)``) or via `backend_opts=`; both are validated against the
     backend's accepted set. Pass a pre-compiled `plan` to share a schedule
-    across sessions.
+    across sessions. A non-flat `topology` compiles the two-level
+    hierarchical Shuffle (`shuffle_plan.compile_hierarchical`): coded across
+    racks, plain within them, delivered words bitwise equal to the flat
+    plan's.
     """
     merged = dict(backend_opts or {})
     merged.update(opts)
     return CompiledEngine(program, g, alloc, mode, path=path,
-                          backend=backend, plan=plan, backend_opts=merged)
+                          backend=backend, plan=plan, backend_opts=merged,
+                          topology=topology)
 
 
 def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
         iters: int, mode: str = "coded",
-        plan: ShufflePlan | None = None, *, path: str = "auto",
-        backend: str = "numpy",
-        backend_opts: dict | None = None) -> EngineResult:
+        plan: ShufflePlan | HierarchicalPlan | None = None, *,
+        path: str = "auto", backend: str = "numpy",
+        backend_opts: dict | None = None,
+        topology: Topology | None = None) -> EngineResult:
     """One-shot wrapper: `compile(...)` + `.run(iters)` (back-compat form).
 
     `path` picks the execution form (see module docstring); "auto" resolves
@@ -616,13 +686,14 @@ def run(program: VertexProgram, g: Graph, alloc: Allocation | None,
     running the same (graph, allocation) more than once.
     """
     return compile(program, g, alloc, mode, path=path, backend=backend,
-                   plan=plan, backend_opts=backend_opts).run(iters)
+                   plan=plan, backend_opts=backend_opts,
+                   topology=topology).run(iters)
 
 
 def restore(directory, program: VertexProgram, g: Graph, *,
             K: int | None = None, mode: str = "coded", path: str = "auto",
             backend: str = "numpy", backend_opts: dict | None = None,
-            epoch: int | None = None):
+            topology: Topology | None = None, epoch: int | None = None):
     """Rebuild a session from the newest complete checkpoint under
     `directory`; returns `(CompiledEngine, SessionCheckpoint)`.
 
@@ -649,7 +720,7 @@ def restore(directory, program: VertexProgram, g: Graph, *,
         from .faults import rebalance
         alloc = rebalance(alloc, K)
     eng = compile(program, g, alloc, mode, path=path, backend=backend,
-                  backend_opts=backend_opts)
+                  backend_opts=backend_opts, topology=topology)
     return eng, ckpt
 
 

@@ -20,7 +20,6 @@ events at iteration boundaries for chaos tests (`CompiledEngine.run` and
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import numpy as np
 
@@ -207,17 +206,13 @@ def straggler_coded_load(graph, alloc: Allocation,
         member (they all Mapped B_{S\\{s'}}) - that unicast is the overhead.
 
     `graph` is a `Graph`, a raw `CSR` view, or an already-compiled scheduled
-    `ShufflePlan` - those route through `straggler_coded_load_plan`, O(plan)
+    `ShufflePlan` - all route through `straggler_coded_load_plan`, O(plan)
     after one O(edges) CSR compile, so straggler accounting works past
-    `dense_limit`. A dense [n, n] adjacency still runs the legacy
-    subset-enumeration reference below (exactly equal by construction: the
-    plan path only replaces the per-group |Z^k| counts), with a
-    DeprecationWarning mirroring `loads.empirical_loads`.
+    `dense_limit`. The legacy dense [n, n] subset-enumeration reference was
+    removed (the plan path is exactly equal by construction; it only
+    replaced the per-group |Z^k| counts); passing a dense adjacency raises
+    `TypeError`.
     """
-    import itertools
-
-    from .bitcodec import T_BITS, segment_bounds
-    from .coded_shuffle import group_need
     from .graph_models import CSR, Graph
     from .shuffle_plan import ShufflePlan, compile_plan_csr
 
@@ -228,18 +223,10 @@ def straggler_coded_load(graph, alloc: Allocation,
         csr = graph.csr if isinstance(graph, Graph) else graph
         return straggler_coded_load_plan(
             compile_plan_csr(csr, alloc, validate=False), stragglers)
-    warnings.warn(
-        "straggler_coded_load(adj, alloc, ...) with a dense adjacency is "
-        "deprecated: pass the Graph (or its .csr, or a compiled plan) so "
-        "the accounting stays O(edges)", DeprecationWarning, stacklevel=2)
-    adj = graph
-    K, r = alloc.K, alloc.r
-    bounds = segment_bounds(r)
-    total_bits = 0
-    for S in itertools.combinations(range(K), r + 1):
-        sizes = {k: len(group_need(adj, alloc, S, k)) for k in S}
-        total_bits += _group_straggler_bits(S, sizes, stragglers, r, bounds)
-    return total_bits / (alloc.n * alloc.n * T_BITS)
+    raise TypeError(
+        "straggler_coded_load needs a Graph, CSR, or compiled ShufflePlan; "
+        "the dense [n, n] adjacency form was removed - pass the Graph (or "
+        "its .csr) so the accounting stays O(edges)")
 
 
 def _group_straggler_bits(S: tuple[int, ...], sizes: dict[int, int],

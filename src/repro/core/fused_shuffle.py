@@ -38,6 +38,18 @@ Word format: one uint32 per coded column and slot, in *codec bit order*
 (`bitcodec.floats_to_words`), so segment s of a value travels left-aligned
 as ``(word << shift_s) & mask_s`` - identical bit semantics to the NumPy
 plan executor, which is what makes the device path bitwise comparable.
+
+**Topology-aware two-level path.** Given a non-flat `Topology` (racks x
+servers) and a `HierarchicalPlan`, the exchange runs on a
+('racks', 'servers') mesh in two collectives: a *plain* all_gather of the
+local Map words on the cheap 'servers' (intra-rack) axis, then the coded XOR
+all_gather of rack-level packed buffers on the expensive 'racks' axis -
+every rack encodes from its phase-A union buffer (replicated within the
+rack, so recompute beats a leader branch), and each server decodes its own
+delivery slice from the rack buffers plus direct intra-rack gathers.
+Delivered words stay bitwise equal to the flat path (`partition_plan` /
+`FusedSparseShuffle` accept a `Topology` and degenerate to the single-level
+exchange on `Topology.flat(K)`).
 """
 from __future__ import annotations
 
@@ -49,13 +61,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels.xor_code import ops as xor_ops
-from ..launch.mesh import make_servers_mesh, shard_map_compat
+from ..launch.mesh import (Topology, make_racks_mesh, make_servers_mesh,
+                           shard_map_compat)
 from ..obs import get_tracer
+from ..obs.metrics import get_registry
 from .allocation import Allocation
 from .bitcodec import floats_to_words, words_to_floats
 from .graph_models import CSR, Graph
-from .shuffle_plan import (PlanShuffleResult, ShufflePlan, _run_ranks,
-                           compile_plan_csr)
+from .shuffle_plan import (HierarchicalPlan, PlanShuffleResult, ShufflePlan,
+                           _rack_first_mapper, _run_ranks, compile_plan_csr)
 
 FULL_MASK = np.uint32(0xFFFFFFFF)
 
@@ -115,15 +129,32 @@ class FusedSparseSchedule:
     strip_mask: np.ndarray        # [K, Dmax, r, r-1] uint32
 
 
-def partition_plan(plan: ShufflePlan, csr: CSR,
-                   alloc: Allocation) -> FusedSparseSchedule:
-    """Partition a compiled CSR plan per server for the fused sparse path.
+def partition_plan(plan: ShufflePlan | HierarchicalPlan, csr: CSR,
+                   alloc: Allocation, topology: Topology | None = None):
+    """Partition a compiled plan per server for the fused sparse path.
 
     Pure compile-time layout (no data): every output array is [nnz]- or
     [plan]-sized. Unicast leftovers are assigned to the smallest server
     that Mapped their column vertex and appended to that sender's buffer as
     single-slot full-width columns, so they ride the same all_gather.
+
+    Topology-aware form: a `HierarchicalPlan` (its `Topology` non-flat)
+    routes to `partition_hierarchical`; `Topology.flat(K)` degenerates to
+    the single-level partition of the plan's flat schedule.
     """
+    if isinstance(plan, HierarchicalPlan):
+        if topology is not None and topology != plan.topology:
+            raise ValueError(
+                f"topology {topology} disagrees with the plan's "
+                f"{plan.topology}")
+        if not plan.topology.is_flat:
+            return partition_hierarchical(plan, csr, alloc)
+        plan = plan.flat
+    elif topology is not None and not topology.is_flat:
+        raise ValueError(
+            "a non-flat Topology needs a HierarchicalPlan "
+            "(core.shuffle_plan.compile_hierarchical), got a flat "
+            "ShufflePlan")
     plan._require_schedule()
     tables = plan.edge_tables(csr, alloc)     # locates edges + validates
     K, r = plan.K, plan.r
@@ -252,6 +283,214 @@ def partition_plan(plan: ShufflePlan, csr: CSR,
         strip_l=strip_l, strip_shift=strip_shift, strip_mask=strip_mask)
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedHierarchicalSchedule:
+    """Per-device partition of a `HierarchicalPlan` for the two-level path.
+
+    Phase A all_gathers each server's `loc` words on the 'servers' axis, so
+    every server holds its rack's union buffer ``rflat`` of
+    ``S * (Lmax + 1)`` words (block s = server s of the rack, word `Lmax`
+    of block 0 a guaranteed zero - the sentinel `ZERO = Lmax`). The rack
+    encode tables (`enc_*`, one row per *rack*, replicated over its
+    servers) index `rflat`; phase B all_gathers the [Wx]-word rack buffers
+    on the 'racks' axis. Per-server decode reads coded segments from
+    ``allbufs[dec_rk, dec_w]`` (rack column `Wx` = zero pad), strips the
+    other slots from `rflat`, and ORs in `direct_l`/`direct_mask` gathers
+    for the intra-only deliveries that never crossed a rack.
+    """
+
+    K: int
+    R: int
+    S: int
+    rr: int                       # rack-level redundancy (inter.r)
+    Wx: int                       # per-rack buffer width (words)
+    Lmax: int                     # max local-value count over servers
+    Dmax: int                     # max delivery count over receivers
+    loc_e: np.ndarray             # [K, Lmax] int64 CSR entry (nnz = zero pad)
+    enc_l: np.ndarray             # [R, Wx, rr] int32 into rflat (ZERO = pad)
+    enc_shift: np.ndarray         # [R, Wx, rr] uint32
+    enc_mask: np.ndarray          # [R, Wx, rr] uint32
+    dec_rk: np.ndarray            # [K, Dmax, rr] int32 sending rack
+    dec_w: np.ndarray             # [K, Dmax, rr] int32 rack column (Wx = zero)
+    dec_mask: np.ndarray          # [K, Dmax, rr] uint32
+    dec_shift: np.ndarray         # [K, Dmax, rr] uint32
+    strip_f: np.ndarray           # [K, Dmax, rr, rr-1] int32 into rflat
+    strip_shift: np.ndarray       # [K, Dmax, rr, rr-1] uint32
+    strip_mask: np.ndarray        # [K, Dmax, rr, rr-1] uint32
+    direct_l: np.ndarray          # [K, Dmax] int32 into rflat (ZERO = pad)
+    direct_mask: np.ndarray       # [K, Dmax] uint32 (FULL for intra-only)
+
+
+def partition_hierarchical(hplan: HierarchicalPlan, csr: CSR,
+                           alloc: Allocation) -> FusedHierarchicalSchedule:
+    """Partition a `HierarchicalPlan` per device for the two-level exchange.
+
+    Same compile-time/no-data discipline as `partition_plan`; every value
+    read from a rack's phase-A buffer comes from the rack's *designated
+    source* (its lowest Mapping server - the same rule the plan's
+    `intra_rack_bits` accounting charges), and every coded segment decodes
+    bitwise like the NumPy hierarchical executor because identical floats
+    produce identical codec words on every holder.
+    """
+    flat, inter, topo = hplan.flat, hplan.inter, hplan.topology
+    R, S = topo.racks, topo.servers_per_rack
+    K, rr = flat.K, inter.r
+    nstrip = max(rr - 1, 0)
+    flat._require_schedule()
+    inter._require_schedule()
+    ft = flat.edge_tables(csr, alloc)           # locates + validates
+    xt = inter.edge_tables(csr, hplan.rack_alloc)
+    has = hplan.rack_alloc.map_sets             # [R, n] rack Mapped vertex
+    first, _ = _rack_first_mapper(alloc, R, S)
+
+    member = alloc.map_sets[:, csr.indices]     # [K, nnz]
+    Lmax = max(int(member.sum(axis=1).max()), 1)
+    loc_e = np.full((K, Lmax), csr.nnz, dtype=np.int64)
+    for k in range(K):
+        lset = np.flatnonzero(member[k])
+        loc_e[k, :lset.size] = lset
+    lpos_all = np.where(member, np.cumsum(member, axis=1) - 1, 0)
+    blk = Lmax + 1
+    ZERO = Lmax                                 # rflat[Lmax] == 0 pad word
+
+    def rfidx(rack, j, e):
+        """Phase-A buffer position of vertex j's value (CSR entry e) as
+        held by `rack`'s designated source server."""
+        if not has[rack, j].all():
+            raise RuntimeError("hierarchical schedule references a vertex "
+                               "its consuming rack never Mapped")
+        off = first[rack, j].astype(np.int64)
+        src = rack.astype(np.int64) * S + off
+        if not member[src, e].all():
+            raise RuntimeError("designated in-rack source did not Map its "
+                               "assigned value")
+        return (off * blk + lpos_all[src, e]).astype(np.int32)
+
+    # --- rack-level sender layout + encode tables (one row per rack) ---
+    colpos, ncols = _sender_layout(inter)
+    Px = inter.pair_k.size
+    Lx = inter.left_k.size
+    if Lx:
+        lsender = np.argmax(has[:, inter.left_j], axis=0)
+        if not has[lsender, inter.left_j].all():
+            raise RuntimeError("rack-level leftover has no Mapping rack")
+        lorder = np.argsort(lsender, kind="stable")
+        _, lrank = _run_ranks(lsender[lorder])
+        leftw = np.empty(Lx, dtype=np.int64)
+        leftw[lorder] = ncols[lsender[lorder]] + lrank
+        nleft = np.bincount(lsender, minlength=R)
+    else:
+        lsender = np.zeros(0, dtype=np.int64)
+        leftw = np.zeros(0, dtype=np.int64)
+        nleft = np.zeros(R, dtype=np.int64)
+    Wx = max(int((ncols + nleft).max()), 1)
+
+    enc_l = np.full((R, Wx, rr), ZERO, dtype=np.int32)
+    enc_shift = np.zeros((R, Wx, rr), dtype=np.uint32)
+    enc_mask = np.zeros((R, Wx, rr), dtype=np.uint32)
+    if inter.col_sender.size:
+        cs, sl = np.nonzero(inter.slot_pair < Px)
+        p = inter.slot_pair[cs, sl]
+        sr = inter.col_sender[cs]               # sending rack per slot
+        enc_l[sr, colpos[cs], sl] = rfidx(sr, inter.pair_j[p], xt.pair_e[p])
+        enc_shift[sr, colpos[cs], sl] = inter.slot_shift[cs, sl]
+        enc_mask[sr, colpos[cs], sl] = inter.slot_mask[cs, sl]
+    if Lx:
+        enc_l[lsender, leftw, 0] = rfidx(lsender, inter.left_j, xt.left_e)
+        enc_mask[lsender, leftw, 0] = FULL_MASK
+
+    # --- decode tables, first in flat (k, i, j) delivery order ---
+    M = flat.all_k.size
+    f_rk = np.zeros((M, rr), dtype=np.int32)
+    f_w = np.full((M, rr), Wx, dtype=np.int32)
+    f_mask = np.zeros((M, rr), dtype=np.uint32)
+    f_shift = np.zeros((M, rr), dtype=np.uint32)
+    f_sf = np.full((M, rr, nstrip), ZERO, dtype=np.int32)
+    f_ssh = np.zeros((M, rr, nstrip), dtype=np.uint32)
+    f_smk = np.zeros((M, rr, nstrip), dtype=np.uint32)
+    f_dl = np.full(M, ZERO, dtype=np.int32)
+    f_dm = np.zeros(M, dtype=np.uint32)
+
+    d_rho = hplan.rack_of[flat.all_k]
+    intra = hplan.inter_pos < 0
+    if intra.any():
+        f_dl[intra] = rfidx(d_rho[intra], flat.all_j[intra], ft.all_e[intra])
+        f_dm[intra] = FULL_MASK
+
+    # Inter deliveries: invert the inter plan's pos_covered/pos_left to
+    # find which covered pair / leftover each flat delivery resolves to.
+    Mx = inter.all_k.size
+    kind_left = np.zeros(Mx, dtype=bool)
+    kind_left[inter.pos_left] = True
+    idx_in = np.empty(Mx, dtype=np.int64)
+    idx_in[inter.pos_covered] = np.arange(Px, dtype=np.int64)
+    idx_in[inter.pos_left] = np.arange(Lx, dtype=np.int64)
+    ms = np.flatnonzero(~intra)
+    q = hplan.inter_pos[ms]
+    is_l = kind_left[q]
+    mc, pc = ms[~is_l], idx_in[q[~is_l]]
+    if mc.size:
+        c, slot = inter.pair_col[pc], inter.pair_slot[pc]   # [Pc, rr]
+        f_rk[mc] = inter.col_sender[c]
+        f_w[mc] = colpos[c]
+        f_mask[mc] = inter.slot_mask[c, slot]
+        f_shift[mc] = np.broadcast_to(inter.seg_shift[None, :],
+                                      (mc.size, rr))
+        if nstrip:
+            ar = np.broadcast_to(np.arange(rr)[None, None, :],
+                                 (mc.size, rr, rr))
+            others = ar[~(ar == slot[..., None])].reshape(mc.size, rr,
+                                                          nstrip)
+            c3 = np.broadcast_to(c[:, :, None], (mc.size, rr, nstrip))
+            sp = inter.slot_pair[c3, others]
+            svalid = sp < Px
+            if svalid.any():
+                spv = sp[svalid]
+                rho3 = np.broadcast_to(d_rho[mc][:, None, None],
+                                       sp.shape)[svalid]
+                fill = np.full(sp.shape, ZERO, dtype=np.int32)
+                fill[svalid] = rfidx(rho3, inter.pair_j[spv],
+                                     xt.pair_e[spv])
+                f_sf[mc] = fill
+            f_ssh[mc] = inter.slot_shift[c3, others]
+            f_smk[mc] = inter.slot_mask[c3, others]
+    ml, pl = ms[is_l], idx_in[q[is_l]]
+    if ml.size:
+        f_rk[ml, 0] = lsender[pl]
+        f_w[ml, 0] = leftw[pl]
+        f_mask[ml, 0] = FULL_MASK               # full word, shift 0
+
+    # --- scatter into per-receiver padded rows (flat per-server CSR) ---
+    Dmax = max(int(np.diff(flat.ptr).max()) if K else 0, 1)
+    kk = flat.all_k
+    dd = np.arange(M, dtype=np.int64) - flat.ptr[kk]
+    dec_rk = np.zeros((K, Dmax, rr), dtype=np.int32)
+    dec_w = np.full((K, Dmax, rr), Wx, dtype=np.int32)
+    dec_mask = np.zeros((K, Dmax, rr), dtype=np.uint32)
+    dec_shift = np.zeros((K, Dmax, rr), dtype=np.uint32)
+    strip_f = np.full((K, Dmax, rr, nstrip), ZERO, dtype=np.int32)
+    strip_shift = np.zeros((K, Dmax, rr, nstrip), dtype=np.uint32)
+    strip_mask = np.zeros((K, Dmax, rr, nstrip), dtype=np.uint32)
+    direct_l = np.full((K, Dmax), ZERO, dtype=np.int32)
+    direct_mask = np.zeros((K, Dmax), dtype=np.uint32)
+    dec_rk[kk, dd] = f_rk
+    dec_w[kk, dd] = f_w
+    dec_mask[kk, dd] = f_mask
+    dec_shift[kk, dd] = f_shift
+    strip_f[kk, dd] = f_sf
+    strip_shift[kk, dd] = f_ssh
+    strip_mask[kk, dd] = f_smk
+    direct_l[kk, dd] = f_dl
+    direct_mask[kk, dd] = f_dm
+
+    return FusedHierarchicalSchedule(
+        K=K, R=R, S=S, rr=rr, Wx=Wx, Lmax=Lmax, Dmax=Dmax, loc_e=loc_e,
+        enc_l=enc_l, enc_shift=enc_shift, enc_mask=enc_mask,
+        dec_rk=dec_rk, dec_w=dec_w, dec_mask=dec_mask, dec_shift=dec_shift,
+        strip_f=strip_f, strip_shift=strip_shift, strip_mask=strip_mask,
+        direct_l=direct_l, direct_mask=direct_mask)
+
+
 ENCODE_BACKENDS = ("xor-ref", "xor-kernel", "jnp")
 
 
@@ -263,6 +502,12 @@ class FusedSparseShuffle:
     `ShufflePlan.execute_coded_sparse`: same [nnz] edge-value input, same
     `PlanShuffleResult` (bitwise-equal uint32 words, same bit accounting).
 
+    Given a `HierarchicalPlan` (or a non-flat `topology=` plus one), the
+    exchange runs the two-level ('racks' x 'servers') pipeline instead -
+    see the module docstring - with `bits_sent` split into
+    inter-rack/intra-rack on the exchange span and the metrics registry.
+    `Topology.flat(K)` degenerates to the single-level exchange.
+
     encode:
       "xor-ref"    - batched kernels/xor_code route, jnp oracle (default).
       "xor-kernel" - same route through the Pallas kernel (interpret=True
@@ -270,28 +515,80 @@ class FusedSparseShuffle:
       "jnp"        - plain jnp XOR reduce (no kernel route).
     """
 
-    def __init__(self, plan: ShufflePlan, csr: CSR, alloc: Allocation,
-                 mesh: Mesh | None = None, *, encode: str = "xor-ref",
+    def __init__(self, plan: ShufflePlan | HierarchicalPlan, csr: CSR,
+                 alloc: Allocation, mesh: Mesh | None = None, *,
+                 topology: Topology | None = None, encode: str = "xor-ref",
                  interpret: bool = True):
         if encode not in ENCODE_BACKENDS:
             raise ValueError(f"unknown encode backend {encode!r}")
-        self.plan = plan
-        self.sched = partition_plan(plan, csr, alloc)
-        self.mesh = make_servers_mesh(plan.K) if mesh is None else mesh
-        if self.mesh.devices.size != plan.K:
+        self._bind(plan, csr, alloc, topology)
+        if mesh is None:
+            mesh = (make_racks_mesh(self.topology) if self._hier
+                    else make_servers_mesh(self.plan.K))
+        self.mesh = mesh
+        if self.mesh.devices.size != self.plan.K:
             raise ValueError(
                 f"mesh has {self.mesh.devices.size} devices but the plan "
-                f"has K={plan.K} servers (one device per server)")
+                f"has K={self.plan.K} servers (one device per server)")
         self._encode = encode
         self._interpret = interpret
-        self._fn = self._build(encode, interpret, batched=False)
+        build = self._build_hier if self._hier else self._build
+        self._fn = build(encode, interpret, batched=False)
         self._fn_batched = None       # built lazily on the first [nnz, B] call
+        self._dev_tables = self._make_dev_tables()
+
+    def _bind(self, plan, csr, alloc, topology) -> None:
+        """Resolve (plan, topology) into the flat or two-level partition.
+
+        A `HierarchicalPlan` carries its own Topology; `Topology.flat(K)`
+        (or no topology) degenerates to the single-level exchange on the
+        plan's flat schedule.
+        """
+        if isinstance(plan, HierarchicalPlan):
+            if topology is not None and topology != plan.topology:
+                raise ValueError(
+                    f"topology {topology} disagrees with the plan's "
+                    f"{plan.topology}")
+            topology = plan.topology
+            if topology.is_flat:
+                plan = plan.flat
+        elif topology is not None and not topology.is_flat:
+            raise ValueError(
+                "a non-flat Topology needs a HierarchicalPlan "
+                "(core.shuffle_plan.compile_hierarchical), got a flat "
+                "ShufflePlan")
+        self.topology = topology
+        self._hier = isinstance(plan, HierarchicalPlan)
+        if self._hier:
+            self.hplan = plan
+            self.plan = plan.flat
+            self.sched = partition_hierarchical(plan, csr, alloc)
+            self._schedule_bits = plan.inter_rack_bits + plan.intra_rack_bits
+        else:
+            self.hplan = None
+            self.plan = plan
+            self.sched = partition_plan(plan, csr, alloc)
+            self._schedule_bits = plan.coded_bits + plan.leftover_bits
+
+    def _make_dev_tables(self):
         s = self.sched
-        self._dev_tables = tuple(jnp.asarray(a) for a in (
+        if self._hier:
+            R, S = self.topology.racks, self.topology.servers_per_rack
+
+            def rs(a):
+                # per-server rows -> mesh-shaped (racks, servers) blocks
+                return a.reshape((R, S) + a.shape[1:])
+
+            return tuple(jnp.asarray(a) for a in (
+                s.enc_l, s.enc_shift, s.enc_mask,
+                rs(s.dec_rk), rs(s.dec_w), rs(s.dec_mask), rs(s.dec_shift),
+                rs(s.strip_f), rs(s.strip_shift), rs(s.strip_mask),
+                rs(s.direct_l), rs(s.direct_mask)))
+        return tuple(jnp.asarray(a) for a in (
             s.enc_l, s.enc_shift, s.enc_mask, s.dec_s, s.dec_w, s.dec_mask,
             s.dec_shift, s.strip_l, s.strip_shift, s.strip_mask))
 
-    def rebind(self, plan: ShufflePlan, csr: CSR,
+    def rebind(self, plan: ShufflePlan | HierarchicalPlan, csr: CSR,
                alloc: Allocation) -> "FusedSparseShuffle":
         """New exchange bound to a mutated (plan, csr) on this instance's
         jitted callables.
@@ -302,19 +599,20 @@ class FusedSparseShuffle:
         and backend flags carry over - the tables are jit *arguments*, so
         XLA re-lowers only if the partition's padded shapes (W, Lmax, Dmax)
         actually changed, and replays the cached executable otherwise.
+        A two-level instance expects a fresh `HierarchicalPlan` on the same
+        Topology (repair keeps the rack structure).
         """
         ex = object.__new__(FusedSparseShuffle)
-        ex.plan = plan
-        ex.sched = partition_plan(plan, csr, alloc)
+        ex._bind(plan, csr, alloc, self.topology)
+        if ex._hier != self._hier:
+            raise ValueError("rebind cannot switch between the flat and "
+                             "two-level exchange; build a new instance")
         ex.mesh = self.mesh
         ex._encode = self._encode
         ex._interpret = self._interpret
         ex._fn = self._fn
         ex._fn_batched = self._fn_batched
-        s = ex.sched
-        ex._dev_tables = tuple(jnp.asarray(a) for a in (
-            s.enc_l, s.enc_shift, s.enc_mask, s.dec_s, s.dec_w, s.dec_mask,
-            s.dec_shift, s.strip_l, s.strip_shift, s.strip_mask))
+        ex._dev_tables = ex._make_dev_tables()
         return ex
 
     def _build(self, encode: str, interpret: bool, batched: bool):
@@ -356,6 +654,68 @@ class FusedSparseShuffle:
                              out_specs=P("servers"), check=not use_kernel)
         return jax.jit(f)
 
+    def _build_hier(self, encode: str, interpret: bool, batched: bool):
+        use_kernel = encode == "xor-kernel"
+        bx = (lambda a: a[..., None]) if batched else (lambda a: a)
+
+        def fold(a, axis, op):
+            # static unroll over a tiny (<= rr) axis: jax.lax.reduce has no
+            # replication rule on a two-axis mesh in jax 0.4.x, plain
+            # binary xor/or ops do
+            parts = [jax.lax.index_in_dim(a, t, axis, keepdims=False)
+                     for t in range(a.shape[axis])]
+            out = parts[0]
+            for x in parts[1:]:
+                out = op(out, x)
+            return out
+
+        def per_server(loc, enc_l, enc_shift, enc_mask, dec_rk, dec_w,
+                       dec_mask, dec_shift, strip_f, strip_shift,
+                       strip_mask, direct_l, direct_mask):
+            loc = loc[0, 0]                       # [Lmax+1(, B)]
+            # Phase A: plain all_gather of local Map words on the cheap
+            # intra-rack axis -> the rack's union buffer, on every member.
+            rloc = jax.lax.all_gather(loc, "servers")   # [S, Lmax+1(, B)]
+            rflat = rloc.reshape((-1,) + rloc.shape[2:])
+            # Phase B: rack-level coded encode (replicated within the rack:
+            # every member computes the same buffer from rflat - recompute
+            # beats a leader branch) + one coded XOR all_gather on the
+            # expensive inter-rack axis.
+            el, esh, emk = enc_l[0], enc_shift[0], enc_mask[0]
+            if encode == "jnp":
+                slotw = (rflat[el] << bx(esh)) & bx(emk)
+                coded = fold(slotw, 1, jnp.bitwise_xor)
+            else:
+                coded = xor_ops.xor_encode_slots(
+                    rflat, el, esh, emk, use_kernel=use_kernel,
+                    interpret=interpret)
+            allbufs = jax.lax.all_gather(coded, "racks")    # [R, Wx(, B)]
+            # zero col Wx appended via concatenate (not jnp.pad: the pad
+            # scalar defeats the 0.4.x two-axis replication checker)
+            allbufs = jnp.concatenate(
+                [allbufs, jnp.zeros_like(allbufs[:, :1])], axis=1)
+            got = allbufs[dec_rk[0, 0], dec_w[0, 0]]        # [Dmax, rr(, B)]
+            if strip_f.shape[-1]:                           # rr > 1
+                sw = ((rflat[strip_f[0, 0]] << bx(strip_shift[0, 0]))
+                      & bx(strip_mask[0, 0]))
+                strip = fold(sw, 2, jnp.bitwise_xor)
+            else:
+                strip = jnp.zeros_like(got)
+            rec = (((got ^ strip) & bx(dec_mask[0, 0]))
+                   >> bx(dec_shift[0, 0]))
+            words = fold(rec, 1, jnp.bitwise_or)
+            # Intra-only deliveries never crossed a rack: direct gather
+            # from the phase-A buffer (mask 0 on inter deliveries).
+            words = words | (rflat[direct_l[0, 0]] & bx(direct_mask[0, 0]))
+            return words[None, None]              # [1, 1, Dmax(, B)]
+
+        f = shard_map_compat(
+            per_server, mesh=self.mesh,
+            in_specs=(P("racks", "servers"),) + (P("racks"),) * 3
+                     + (P("racks", "servers"),) * 9,
+            out_specs=P("racks", "servers"), check=not use_kernel)
+        return jax.jit(f)
+
     def exchange_words(self, edge_words: np.ndarray) -> np.ndarray:
         """One coded Shuffle on codec-order uint32 words.
 
@@ -378,9 +738,9 @@ class FusedSparseShuffle:
                      nnz=int(edge_words.shape[0])):
             if batched:
                 if self._fn_batched is None:
-                    self._fn_batched = self._build(self._encode,
-                                                   self._interpret,
-                                                   batched=True)
+                    build = self._build_hier if self._hier else self._build
+                    self._fn_batched = build(self._encode, self._interpret,
+                                             batched=True)
                 ew = np.concatenate(
                     [ew, np.zeros((1, ew.shape[1]), np.uint32)], axis=0)
                 loc = np.zeros((s.K, s.Lmax + 1, ew.shape[1]),
@@ -391,18 +751,37 @@ class FusedSparseShuffle:
                 loc = np.zeros((s.K, s.Lmax + 1), dtype=np.uint32)
                 fn = self._fn
             loc[:, :s.Lmax] = ew[s.loc_e]
+            if self._hier:
+                # device (rho, s) of the (racks, servers) mesh is server
+                # rho * S + s, so the reshape is the identity placement
+                loc = loc.reshape((self.topology.racks,
+                                   self.topology.servers_per_rack)
+                                  + loc.shape[1:])
         plan = self.plan
-        bits = (plan.coded_bits + plan.leftover_bits) * B
+        bits = self._schedule_bits * B
+        attrs = dict(backend="fused", bits=bits, B=B, K=s.K)
+        if self._hier:
+            attrs.update(inter_rack_bits=self.hplan.inter_rack_bits * B,
+                         intra_rack_bits=self.hplan.intra_rack_bits * B)
         # Host-side timing around the jitted multi-device exchange: block
         # on the device buffers before stamping so the span covers the
         # collective's execution, not just its dispatch.
-        with tr.span("phase.exchange", backend="fused", bits=bits, B=B,
-                     K=s.K):
+        with tr.span("phase.exchange", **attrs):
             dev = fn(jnp.asarray(loc), *self._dev_tables)
             jax.block_until_ready(dev)
+        if self._hier:
+            reg = get_registry()
+            reg.counter("shuffle_inter_rack_bits_total",
+                        "coded-Shuffle bits crossing rack boundaries") \
+                .inc(self.hplan.inter_rack_bits * B)
+            reg.counter("shuffle_intra_rack_bits_total",
+                        "coded-Shuffle bits moving inside racks") \
+                .inc(self.hplan.intra_rack_bits * B)
         with tr.span("phase.decode", backend="fused", B=B,
                      deliveries=int(plan.all_k.size)):
             out = np.asarray(dev)
+            if self._hier:
+                out = out.reshape((plan.K,) + out.shape[2:])
             M = plan.all_k.size
             return out[plan.all_k, np.arange(M, dtype=np.int64)
                        - plan.ptr[plan.all_k]]
@@ -413,7 +792,7 @@ class FusedSparseShuffle:
         plan = self.plan
         edge_vals = np.asarray(edge_vals, np.float32)
         words = self.exchange_words(floats_to_words(edge_vals))
-        bits = ((plan.coded_bits + plan.leftover_bits)
+        bits = (self._schedule_bits
                 * (edge_vals.shape[1] if edge_vals.ndim == 2 else 1))
         return PlanShuffleResult(plan.all_k, plan.all_i, plan.all_j,
                                  words_to_floats(words), plan.ptr, bits,

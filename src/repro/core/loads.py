@@ -7,44 +7,94 @@ compiled ShufflePlan; the benchmarks overlay the closed forms on these.
 from __future__ import annotations
 
 import math
-import warnings
 
 import numpy as np
 
 
-def empirical_loads(graph, alloc) -> dict[str, float]:
+def _rack_split_flat(plan, alloc, topology) -> tuple[int, int]:
+    """(inter, intra) rack bits of the FLAT schedule laid on `topology`.
+
+    A multicast column crosses the rack fabric iff any of its receivers
+    lives outside the sender's rack (the word then traverses at least one
+    inter-rack link); a unicast leftover crosses iff its designated sender
+    (the lowest-index mapper of the column vertex) is in a different rack
+    than the receiver. On `Topology.flat(K)` every transfer is inter-rack,
+    matching the degenerate hierarchical accounting.
+    """
+    from .bitcodec import T_BITS
+
+    plan._require_schedule()
+    rack_of = topology.rack_of()
+    inter = 0
+    P = plan.pair_k.size
+    if plan.col_width.size and P:
+        sp = plan.slot_pair                              # [C, r], P sentinel
+        occupied = sp < P
+        recv_rack = rack_of[plan.pair_k[np.where(occupied, sp, 0)]]
+        send_rack = rack_of[plan.col_sender][:, None]
+        crosses = (occupied & (recv_rack != send_rack)).any(axis=1)
+        inter += int(plan.col_width[crosses].sum())
+    if plan.left_k.size:
+        send = np.argmax(alloc.map_sets[:, plan.left_j], axis=0)
+        inter += int((rack_of[send] != rack_of[plan.left_k]).sum()) * T_BITS
+    total = plan.coded_bits + plan.leftover_bits
+    return inter, total - inter
+
+
+def empirical_loads(graph, alloc, *, topology=None) -> dict[str, float]:
     """Exact uncoded/coded Definition-2 loads of one realization.
 
     `graph` is a `Graph`, a raw `CSR` view, or an already-compiled
-    `ShufflePlan` - all three stay O(edges) end to end (the plan compiles
-    via `compile_plan_csr`), so measuring loads works at any n the sparse
-    engine runs at. A dense [n, n] adjacency is still accepted for the
-    legacy validation path, with a DeprecationWarning: it cannot exist past
-    `dense_limit`, and the CSR route is bitwise-equal below it
-    (`compile_plan_csr` is schedule-identical to `compile_plan`).
+    `ShufflePlan` / `HierarchicalPlan` - all of which stay O(edges) end to
+    end (plans compile via `compile_plan_csr`), so measuring loads works at
+    any n the sparse engine runs at. The legacy dense [n, n] adjacency form
+    was removed (it could not exist past `dense_limit` and the CSR route is
+    schedule-identical); passing one raises `TypeError`.
 
-    Both numbers come from a single plan compile (the schedule fixes the bit
-    volume; no data moves), replacing the separate subset-enumeration and
-    per-server scans the benchmarks used to run.
+    With a `Topology`, the result additionally splits the coded Shuffle's
+    bits per fabric level: ``inter_rack_bits`` / ``intra_rack_bits`` (plus
+    the normalized ``inter_rack_load``). A `HierarchicalPlan` (or a
+    Graph/CSR with a non-flat topology, which compiles one) reports the
+    two-level scheme's split; a flat `ShufflePlan` with a topology reports
+    what the *flat* schedule costs on that fabric - the baseline the
+    hierarchical scheme's win is measured against.
+
+    Both headline numbers come from a single plan compile (the schedule
+    fixes the bit volume; no data moves).
     """
     from .bitcodec import T_BITS
     from .graph_models import CSR, Graph
-    from .shuffle_plan import ShufflePlan, compile_plan, compile_plan_csr
+    from .shuffle_plan import (HierarchicalPlan, ShufflePlan,
+                               compile_hierarchical, compile_plan_csr)
 
-    if isinstance(graph, ShufflePlan):
+    hplan = None
+    if isinstance(graph, HierarchicalPlan):
+        hplan = graph
+        if topology is not None and topology != hplan.topology:
+            raise ValueError(
+                f"topology {topology} disagrees with the plan's "
+                f"{hplan.topology}")
+        topology = hplan.topology
+        hplan.check_alloc(alloc)
+        plan = hplan.flat
+    elif isinstance(graph, ShufflePlan):
         plan = graph
         plan.check_alloc(alloc)
-    elif isinstance(graph, Graph):
-        plan = compile_plan_csr(graph.csr, alloc, validate=False)
-    elif isinstance(graph, CSR):
-        plan = compile_plan_csr(graph, alloc, validate=False)
+    elif isinstance(graph, (Graph, CSR)):
+        csr = graph.csr if isinstance(graph, Graph) else graph
+        if topology is not None and not topology.is_flat:
+            topology.check_K(alloc.K)
+            hplan = compile_hierarchical(csr, alloc, topology, validate=False)
+            plan = hplan.flat
+        else:
+            plan = compile_plan_csr(csr, alloc, validate=False)
     else:
-        warnings.warn(
-            "empirical_loads(adj, alloc) with a dense adjacency is "
-            "deprecated: pass the Graph (or its .csr) so the load "
-            "measurement stays O(edges)", DeprecationWarning, stacklevel=2)
-        plan = compile_plan(np.asarray(graph), alloc, validate=False)
-    return {
+        raise TypeError(
+            "empirical_loads needs a Graph, CSR, ShufflePlan, or "
+            "HierarchicalPlan; the dense [n, n] adjacency form was removed "
+            "- pass the Graph (or its .csr) so the measurement stays "
+            "O(edges)")
+    out = {
         "uncoded": plan.uncoded_load(),
         "coded": plan.coded_load(),
         "coded_leftover_unicast": plan.leftover_bits
@@ -52,6 +102,17 @@ def empirical_loads(graph, alloc) -> dict[str, float]:
         "gain": plan.uncoded_load() / plan.coded_load()
         if plan.coded_bits else float("nan"),
     }
+    if topology is not None:
+        if hplan is not None and not topology.is_flat:
+            inter = hplan.inter_rack_bits
+            intra = hplan.intra_rack_bits
+        else:
+            topology.check_K(alloc.K)
+            inter, intra = _rack_split_flat(plan, alloc, topology)
+        out["inter_rack_bits"] = float(inter)
+        out["intra_rack_bits"] = float(intra)
+        out["inter_rack_load"] = inter / (alloc.n * alloc.n * T_BITS)
+    return out
 
 
 def uncoded_load_er(p: float, r: float, K: int) -> float:

@@ -98,8 +98,7 @@ def test_table2_karate_rows_match_dense_reference(tmp_path):
         assert row["n"] == 34 and row["edges"] == 78
         alloc = er_allocation(g.n, 4, row["r"], interleave=True, pad=True)
         assert row["n_padded"] == alloc.n
-        with pytest.warns(DeprecationWarning):
-            want = loads.empirical_loads(g.padded(alloc.n).adj, alloc)
+        want = loads.empirical_loads(g.padded(alloc.n), alloc)
         assert row["uncoded"] == want["uncoded"]          # bitwise: same plan
         assert row["coded"] == want["coded"]
         assert row["gain"] == want["gain"]

@@ -95,9 +95,9 @@ def test_straggler_load_degrades_gracefully():
         prev = load
 
 
-def test_straggler_load_plan_matches_dense_reference():
-    """The CSR/plan entry point (PR 5) reproduces the dense subset-
-    enumeration reference exactly: same sizes, same hand-over accounting."""
+def test_straggler_load_entry_points_agree_and_dense_rejected():
+    """Graph / CSR / plan entry points agree exactly (one plan underneath);
+    the removed dense-adjacency reference now raises TypeError."""
     from repro import graphs
     from repro.core.shuffle_plan import compile_plan_csr
 
@@ -108,12 +108,12 @@ def test_straggler_load_plan_matches_dense_reference():
         plan = compile_plan_csr(g.csr, alloc, validate=False)
         for s in range(1, r):
             strag = tuple(range(s))
-            with pytest.warns(DeprecationWarning, match="dense adjacency"):
-                want = faults.straggler_coded_load(g.adj, alloc, strag)
-            assert faults.straggler_coded_load(g, alloc, strag) == want
+            want = faults.straggler_coded_load(g, alloc, strag)
             assert faults.straggler_coded_load(g.csr, alloc, strag) == want
             assert faults.straggler_coded_load(plan, alloc, strag) == want
             assert faults.straggler_coded_load_plan(plan, strag) == want
+        with pytest.raises(TypeError, match="dense .* form was removed"):
+            faults.straggler_coded_load(g.adj, alloc, (0,))
 
 
 def test_straggler_plan_rejects_unhealthy_groups_and_no_schedule():
@@ -316,9 +316,9 @@ def test_rebalance_pad_routes_through_padding():
     assert np.isinf(res.state[n:]).all()
 
 
-def test_straggler_dense_form_deprecated_but_exact():
-    """PR 7 satellite: the dense-adjacency form warns (plan path is the
-    supported one) and still reproduces the plan accounting exactly."""
+def test_straggler_dense_form_removed():
+    """PR 10 satellite: the dense-adjacency form is gone (TypeError); the
+    plan form stays warning-free."""
     from repro.core.shuffle_plan import compile_plan_csr
 
     K, r = 6, 3
@@ -326,9 +326,9 @@ def test_straggler_dense_form_deprecated_but_exact():
     g = gm.erdos_renyi(n, 0.15, seed=11)
     alloc = er_allocation(n, K, r)
     plan = compile_plan_csr(g.csr, alloc, validate=False)
-    with pytest.warns(DeprecationWarning, match="dense adjacency"):
-        dense = faults.straggler_coded_load(g.adj, alloc, (0,))
+    with pytest.raises(TypeError, match="dense .* form was removed"):
+        faults.straggler_coded_load(g.adj, alloc, (0,))
     import warnings as _w
     with _w.catch_warnings():
         _w.simplefilter("error")    # the plan form must stay silent
-        assert faults.straggler_coded_load(plan, alloc, (0,)) == dense
+        assert faults.straggler_coded_load(plan, alloc, (0,)) > 0

@@ -1,0 +1,175 @@
+"""Two-level (racks x servers) fused Shuffle parity (8 forced host devices).
+
+Acceptance criterion of the topology refactor: the hierarchical fused
+exchange - coded XOR all_gather on the 'racks' mesh axis, plain
+gather/scatter on 'servers' - must deliver *bitwise-identical* uint32 words
+to the flat NumPy plan executor across er/pl/sbm x {pagerank, sssp}, both
+rack shapes (R=4,S=2 and R=2,S=4), the unicast-leftover spill, and batched
+[.., B] payloads, and `engine.run(..., topology=, backend="fused")` must
+reproduce the flat engine state bitwise.
+
+Runs in subprocesses so the 8-device host-platform flag never leaks into
+other tests (HOME + JAX_PLATFORMS=cpu passed through per the ROADMAP note).
+"""
+import json
+import os
+import subprocess
+import sys
+
+PREAMBLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+
+from repro import graphs
+from repro.core import algorithms as algo
+from repro.core import engine
+from repro.core.allocation import (bipartite_allocation, divisible_n,
+                                   er_allocation)
+from repro.core.bitcodec import floats_to_words
+from repro.core.fused_shuffle import FusedSparseShuffle
+from repro.core.shuffle_plan import compile_hierarchical, compile_plan_csr
+from repro.launch.mesh import Topology
+
+out = {}
+
+
+def case(model, K=8, r=2):
+    if model == "er":
+        n = divisible_n(96, K, r)
+        return (graphs.erdos_renyi(n, 0.15, seed=11),
+                er_allocation(n, K, r, interleave=True))
+    if model == "pl":
+        n = divisible_n(96, K, r)
+        return (graphs.power_law(n, 2.5, seed=9),
+                er_allocation(n, K, r, interleave=True))
+    if model == "sbm":
+        n = divisible_n(112, K, r)
+        return (graphs.stochastic_block(n // 2, n // 2, 0.25, 0.05, seed=5),
+                er_allocation(n, K, r, interleave=True))
+    raise ValueError(model)
+
+
+def parity(g, alloc, topo, prog, iters=2, B=0, **kw):
+    # The flat NumPy executor is the oracle: the hierarchical fused words
+    # must match it bitwise, round after round on the same jitted exchange.
+    hplan = compile_hierarchical(g.csr, alloc, topo)
+    tables = hplan.flat.edge_tables(g.csr, alloc)
+    fx = FusedSparseShuffle(hplan, g.csr, alloc, **kw)
+    state = prog.init(g)
+    if B:
+        assert state.ndim == 2 and state.shape[1] == B  # batch-native program
+    ok = True
+    for _ in range(iters):
+        ev = prog.map_edge_values(g, state).astype(np.float32)
+        ref = hplan.flat.execute_coded_sparse(ev, tables)
+        res = fx.execute(ev)
+        ok = ok and np.array_equal(floats_to_words(ref.values),
+                                   floats_to_words(res.values))
+        buf = np.concatenate([ev, ref.values])
+        state = prog.reduce_edges(buf[tables.gather], g.csr.indptr, state, g)
+    return bool(ok)
+"""
+
+SCRIPT_PARITY = PREAMBLE + r"""
+for model in ("er", "sbm", "pl"):
+    g, alloc = case(model)
+    for topo in (Topology(4, 2), Topology(2, 4)):
+        for prog in (algo.pagerank(), algo.sssp(0)):
+            key = f"{model}_{prog.name}_{topo.racks}x{topo.servers_per_rack}"
+            out[key] = parity(g, alloc, topo, prog)
+
+# Batched [.., B] payloads ride the same two-level exchange.
+g, alloc = case("er")
+out["batched_B3"] = parity(g, alloc, Topology(4, 2),
+                           algo.multi_sssp([0, 3, 11]), B=3)
+
+# Unicast-leftover spill (bipartite r > K2) + non-trivial rack leftovers.
+g, alloc = (graphs.random_bipartite(32, 18, 0.3, seed=5),
+            bipartite_allocation(32, 18, 6, 3))
+out["spill_has_leftovers"] = bool(
+    compile_plan_csr(g.csr, alloc).left_k.size > 0)
+for topo in (Topology(3, 2), Topology(2, 3)):
+    key = f"spill_{topo.racks}x{topo.servers_per_rack}"
+    out[key] = parity(g, alloc, topo, algo.pagerank())
+
+# jnp encode route (no Pallas) on the two-level mesh.
+g, alloc = case("er")
+out["encode_jnp"] = parity(g, alloc, Topology(2, 4), algo.pagerank(),
+                           iters=1, encode="jnp")
+print(json.dumps(out))
+"""
+
+SCRIPT_ENGINE = PREAMBLE + r"""
+# engine.run(topology=, backend="fused") == flat numpy engine, bitwise.
+g, alloc = case("sbm")
+prog = algo.pagerank()
+rn = engine.run(prog, g, alloc, 6, mode="coded", path="sparse")
+for topo in (Topology(4, 2), Topology(2, 4)):
+    rf = engine.run(prog, g, alloc, 6, mode="coded", path="sparse",
+                    backend="fused", topology=topo)
+    key = f"engine_fused_{topo.racks}x{topo.servers_per_rack}"
+    out[key] = bool(np.array_equal(floats_to_words(rn.state),
+                                   floats_to_words(rf.state)))
+    rh = engine.run(prog, g, alloc, 6, mode="coded", path="sparse",
+                    topology=topo)
+    out[key + "_numpy"] = bool(np.array_equal(floats_to_words(rn.state),
+                                              floats_to_words(rh.state)))
+    # numpy and fused hierarchical sessions price the Shuffle identically.
+    out[key + "_bits"] = bool(rf.shuffle_bits == rh.shuffle_bits)
+
+# The flat-topology front door degenerates to the flat fused session.
+eng = engine.compile(prog, g, alloc, "coded", backend="fused",
+                     topology=Topology.flat(alloc.K))
+out["flat_degenerate"] = bool(eng.hplan is None
+                              and eng.fused._hier is False)
+rd = eng.run(6)
+out["flat_degenerate_bitwise"] = bool(np.array_equal(
+    floats_to_words(rn.state), floats_to_words(rd.state)))
+
+# fail() keeps the rack structure on the fused two-level session.
+ef = engine.compile(prog, g, alloc, "coded", backend="fused",
+                    topology=Topology(4, 2)).fail((3,))
+out["fail_keeps_racks"] = bool(ef.hplan is not None
+                               and ef.hplan.topology == Topology(4, 2))
+rfail = ef.run(4)
+rref = engine.compile(prog, g, alloc, "coded").fail((3,)).run(4)
+out["fail_bitwise"] = bool(np.array_equal(floats_to_words(rref.state),
+                                          floats_to_words(rfail.state)))
+print(json.dumps(out))
+"""
+
+
+def _run(script, timeout=900):
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=timeout,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": os.environ.get("HOME", "/tmp"),
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_hierarchical_fused_word_parity_models_programs_spill_batched():
+    res = _run(SCRIPT_PARITY)
+    for model in ("er", "sbm", "pl"):
+        for prog in ("pagerank", "sssp"):
+            for shape in ("4x2", "2x4"):
+                assert res[f"{model}_{prog}_{shape}"], (model, prog, shape)
+    assert res["batched_B3"]
+    assert res["spill_has_leftovers"]
+    assert res["spill_3x2"] and res["spill_2x3"]
+    assert res["encode_jnp"]
+
+
+def test_hierarchical_engine_fused_and_fault_composition():
+    res = _run(SCRIPT_ENGINE)
+    for shape in ("4x2", "2x4"):
+        assert res[f"engine_fused_{shape}"], shape
+        assert res[f"engine_fused_{shape}_numpy"], shape
+        assert res[f"engine_fused_{shape}_bits"], shape
+    assert res["flat_degenerate"]
+    assert res["flat_degenerate_bitwise"]
+    assert res["fail_keeps_racks"]
+    assert res["fail_bitwise"]

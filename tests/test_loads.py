@@ -109,19 +109,18 @@ def test_sbm_achievability_and_converse():
     ("pl", dict(n=60, gamma=2.5),
      lambda: er_allocation(60, 5, 2, interleave=True)),
 ])
-def test_empirical_loads_csr_bitwise_equals_dense(model, kw, mk_alloc):
-    """`empirical_loads` accepts Graph / CSR / compiled plan; every form is
-    bitwise equal to the deprecated dense-adjacency path on all 4 models
-    (compile_plan_csr is schedule-identical to compile_plan)."""
+def test_empirical_loads_forms_agree_and_dense_rejected(model, kw, mk_alloc):
+    """`empirical_loads` accepts Graph / CSR / compiled plan - every form is
+    bitwise equal on all 4 models (one schedule underneath) - and the
+    removed dense-adjacency form now raises TypeError."""
     g = graphs.sample(model, seed=3, **kw)
     alloc = mk_alloc()
-    got = loads.empirical_loads(g, alloc)
-    with pytest.warns(DeprecationWarning, match="O\\(edges\\)"):
-        want = loads.empirical_loads(g.adj, alloc)
-    assert got == want                                # exact, not approx
+    want = loads.empirical_loads(g, alloc)
     assert loads.empirical_loads(g.csr, alloc) == want
     plan = compile_plan_csr(g.csr, alloc, validate=False)
     assert loads.empirical_loads(plan, alloc) == want
+    with pytest.raises(TypeError, match="dense .* form was removed"):
+        loads.empirical_loads(g.adj, alloc)
 
 
 def test_empirical_loads_plan_alloc_mismatch_raises():

@@ -9,7 +9,9 @@ from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
 from test_delta_plan import check_delta_vs_fresh, mk_delta
-from test_schedule_invariants import (check_plan_csr_identity,
+from test_schedule_invariants import (check_flat_degeneracy,
+                                      check_hierarchical_levels,
+                                      check_plan_csr_identity,
                                       check_schedule_complete,
                                       check_sparse_dense_delivery_equal,
                                       check_word_conservation)
@@ -22,18 +24,22 @@ from repro.core.allocation import (divisible_n, er_allocation,
 from repro.core.bitcodec import bits_to_floats, floats_to_bits, split_segments
 from repro.core.coded_shuffle import coded_load
 from repro.core.uncoded_shuffle import uncoded_load
+from repro.launch.mesh import Topology
 
 kr = st.tuples(st.integers(3, 6), st.integers(1, 4)).filter(lambda t: t[1] <= t[0])
 
 
 @st.composite
 def graph_allocs(draw):
-    """Random small (graph, allocation) pairs for the schedule invariants.
+    """Random small (graph, allocation, topology) draws for the invariants.
 
     Covers all three allocation families (block ER, interleaved ER, random
     placement - the last has no multicast structure by design, which is
     exactly why the invariants must still hold on it) over ER and power-law
     realizations, including r = 1 (no coding) and r = K (full replication).
+    The topology dimension draws any rack shape R x S = K - from the flat
+    S=1 form to the one-rack R=1 form - driving the two-level invariants
+    over the same random pair space.
     """
     K = draw(st.integers(3, 6))
     r = draw(st.integers(1, min(K, 4)))
@@ -48,31 +54,50 @@ def graph_allocs(draw):
         alloc = random_allocation(n, K, r, seed=seed)
     else:
         alloc = er_allocation(n, K, r, interleave=kind == "er-interleave")
-    return g, alloc
+    S = draw(st.sampled_from([s for s in range(1, K + 1) if K % s == 0]))
+    return g, alloc, Topology(K // S, S)
 
 
 @given(graph_allocs())
 @settings(max_examples=25, deadline=None)
 def test_schedule_completeness_property(case):
-    check_schedule_complete(*case)
+    check_schedule_complete(*case[:2])
 
 
 @given(graph_allocs())
 @settings(max_examples=25, deadline=None)
 def test_xor_word_conservation_property(case):
-    check_word_conservation(*case)
+    check_word_conservation(*case[:2])
 
 
 @given(graph_allocs())
 @settings(max_examples=25, deadline=None)
 def test_compile_plan_csr_bitwise_identity_property(case):
-    check_plan_csr_identity(*case)
+    check_plan_csr_identity(*case[:2])
 
 
 @given(graph_allocs())
 @settings(max_examples=25, deadline=None)
 def test_sparse_dense_delivery_equality_property(case):
-    check_sparse_dense_delivery_equal(*case)
+    check_sparse_dense_delivery_equal(*case[:2])
+
+
+@given(graph_allocs())
+@settings(max_examples=20, deadline=None)
+def test_hierarchical_flat_degeneracy_property(case):
+    """Tentpole contract as a property: `Topology.flat(K)` compiles to
+    arrays bitwise identical to `compile_plan_csr` on random pairs."""
+    g, alloc, _ = case
+    check_flat_degeneracy(g, alloc)
+
+
+@given(graph_allocs())
+@settings(max_examples=20, deadline=None)
+def test_hierarchical_per_level_property(case):
+    """Per-level completeness + word conservation + bitwise delivery
+    equality for the drawn topology (flat draws degenerate gracefully)."""
+    g, alloc, topo = case
+    check_hierarchical_levels(g, alloc, topo)
 
 
 @given(kr, st.integers(0, 10_000))
@@ -160,7 +185,7 @@ def graph_alloc_deltas(draw):
     """(graph, allocation, EdgeDelta) draws for the incremental-maintenance
     contract: random insert/delete batches (including empty and one-sided
     ones) over the same allocation families as `graph_allocs`."""
-    g, alloc = draw(graph_allocs())
+    g, alloc, _ = draw(graph_allocs())
     rng = np.random.default_rng(draw(st.integers(0, 10_000)))
     nins = draw(st.integers(0, 6))
     ndel = draw(st.integers(0, 6))
@@ -183,7 +208,7 @@ def alloc_failures(draw):
     """(graph, allocation, failed-set) draws for the degradation invariants,
     spanning |failed| from 1 to K-1 (so both the repair regime and the
     re-Map regime are exercised)."""
-    g, alloc = draw(graph_allocs())
+    g, alloc, _ = draw(graph_allocs())
     m = draw(st.integers(1, alloc.K - 1))
     failed = draw(st.sets(st.integers(0, alloc.K - 1),
                           min_size=m, max_size=m))

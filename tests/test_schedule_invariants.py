@@ -17,7 +17,13 @@ this module pins a deterministic seeded matrix that runs everywhere
     `compile_plan_csr` (adjacency-free) emit bitwise-identical plans;
   * delivery equality - the sparse [nnz]-vector executors deliver the same
     (k, i, j, value) arrays, bit for bit, as the dense [n, n] executors,
-    in every plan mode.
+    in every plan mode;
+  * hierarchical per-level completeness + word conservation - every flat
+    delivery of a two-level plan is routed exactly once (in-rack source
+    that really Mapped the vertex, or a matching rack-level stream entry),
+    the rack-level stream is fully consumed, the per-level bit split is
+    exactly what the executor reports, and `Topology.flat(K)` degenerates
+    to the flat plan bitwise.
 """
 import dataclasses
 
@@ -29,8 +35,10 @@ from repro.core import graph_models as gm
 from repro.core.allocation import (bipartite_allocation, divisible_n,
                                    er_allocation, random_allocation)
 from repro.core.bitcodec import T_BITS
-from repro.core.shuffle_plan import compile_plan, compile_plan_csr
+from repro.core.shuffle_plan import (compile_hierarchical, compile_plan,
+                                     compile_plan_csr)
 from repro.core.uncoded_shuffle import missing_pairs
+from repro.launch.mesh import Topology
 
 PLAN_MODES = ("uncoded", "coded", "coded-fast")
 
@@ -130,6 +138,86 @@ def check_sparse_dense_delivery_equal(g, alloc):
     return plan
 
 
+def _assert_plans_bitwise_equal(pa, pb, label):
+    for f in dataclasses.fields(pa):
+        va, vb = getattr(pa, f.name), getattr(pb, f.name)
+        if isinstance(va, np.ndarray):
+            assert vb is not None and va.dtype == vb.dtype, (label, f.name)
+            np.testing.assert_array_equal(va, vb,
+                                          err_msg=f"{label}.{f.name}")
+        else:
+            assert va == vb, (label, f.name)
+
+
+def check_flat_degeneracy(g, alloc):
+    """`Topology.flat(K)` compiles to exactly today's plan: the flat
+    sub-plan AND the rack-level plan are bitwise `compile_plan_csr`, and
+    every delivery routes through the (degenerate) inter level."""
+    hp = compile_hierarchical(g.csr, alloc, Topology.flat(alloc.K),
+                              validate=False)
+    pc = compile_plan_csr(g.csr, alloc, validate=False)
+    _assert_plans_bitwise_equal(hp.flat, pc, "flat")
+    _assert_plans_bitwise_equal(hp.inter, pc, "inter")
+    assert hp.intra_words == 0 and hp.intra_rack_bits == 0
+    assert (hp.inter_pos >= 0).all() and (hp.intra_src == -1).all()
+    assert hp.inter_rack_bits == pc.coded_bits + pc.leftover_bits
+    return hp
+
+
+def check_hierarchical_levels(g, alloc, topology):
+    """Per-level completeness + word conservation of a two-level plan.
+
+    Completeness: the flat delivery stream partitions exactly into
+    intra-rack deliveries (an in-rack source that really Mapped the
+    vertex, same rack as the receiver) and inter-rack ones (a matching
+    (rack, i, j) entry of the rack-level stream), the split agreeing with
+    the rack union Map sets; the rack-level stream is consumed exactly
+    (no dangling entries - deliveries are unique per (i, j), so the
+    mapping is a bijection). Conservation: the per-level bit accounting
+    recomposes from the sub-plans and is exactly what the executor
+    reports, with delivered words bitwise equal to the flat executor.
+    """
+    hplan = compile_hierarchical(g.csr, alloc, topology)
+    flat = compile_plan_csr(g.csr, alloc, validate=False)
+    _assert_plans_bitwise_equal(hplan.flat, flat, "flat-subplan")
+    rack_of = topology.rack_of()
+    inter = hplan.inter
+    intra = hplan.inter_pos < 0
+    # Exactly one routing per flat delivery.
+    assert np.array_equal(intra, hplan.intra_src >= 0)
+    # The split agrees with the rack union Map sets (in-rack copy iff
+    # some member of the receiver's rack Mapped the vertex).
+    has = hplan.rack_alloc.map_sets
+    d_rho = rack_of[flat.all_k]
+    assert np.array_equal(intra, has[d_rho, flat.all_j])
+    # Intra: the designated source is in the receiver's rack and Mapped j.
+    src = hplan.intra_src[intra]
+    assert (rack_of[src] == d_rho[intra]).all()
+    assert alloc.map_sets[src, flat.all_j[intra]].all()
+    # Inter: the rack-level entry matches (rack, i, j) and every entry of
+    # the rack-level stream is consumed exactly once.
+    pos = hplan.inter_pos[~intra]
+    assert (inter.all_k[pos] == d_rho[~intra]).all()
+    assert (inter.all_i[pos] == flat.all_i[~intra]).all()
+    assert (inter.all_j[pos] == flat.all_j[~intra]).all()
+    used = np.zeros(inter.all_k.size, dtype=bool)
+    used[pos] = True
+    assert used.all() and pos.size == inter.all_k.size
+    # Word conservation per level.
+    assert hplan.inter_rack_bits == inter.coded_bits + inter.leftover_bits
+    assert hplan.intra_rack_bits == hplan.intra_words * T_BITS
+    assert hplan.total_bits == hplan.inter_rack_bits + hplan.intra_rack_bits
+    prog = algo.sssp(0)
+    ev = prog.map_edge_values(g, prog.init(g)).astype(np.float32)
+    tables = hplan.edge_tables(g.csr, alloc)
+    res = hplan.execute_coded_sparse(ev, tables)
+    ref = flat.execute_coded_sparse(ev, flat.edge_tables(g.csr, alloc))
+    np.testing.assert_array_equal(res.values.view(np.uint32),
+                                  ref.values.view(np.uint32))
+    assert res.bits_sent == hplan.total_bits
+    return hplan
+
+
 CHECKS = {
     "complete": check_schedule_complete,
     "words": check_word_conservation,
@@ -172,6 +260,29 @@ _CASES = _cases()
 def test_schedule_invariant(case, check):
     _, g, alloc = case
     CHECKS[check](g, alloc)
+
+
+def _topos_for(K):
+    """Non-flat rack shapes of K servers (R x S = K, S > 1), including the
+    degenerate one-rack form (everything intra)."""
+    return [Topology(K // S, S) for S in range(2, K + 1) if K % S == 0]
+
+
+@pytest.mark.parametrize("case", _CASES, ids=[c[0] for c in _CASES])
+def test_hierarchical_per_level_invariants(case):
+    _, g, alloc = case
+    check_flat_degeneracy(g, alloc)
+    for topo in _topos_for(alloc.K):
+        check_hierarchical_levels(g, alloc, topo)
+
+
+def test_hierarchical_one_rack_is_all_intra():
+    """R=1 puts every server in one rack: the union Map set covers every
+    batch, so nothing crosses and the inter level is empty."""
+    _, g, alloc = next(c for c in _CASES if c[0] == "er0")
+    hp = check_hierarchical_levels(g, alloc, Topology(1, alloc.K))
+    assert hp.inter_rack_bits == 0 and (hp.inter_pos == -1).all()
+    assert hp.intra_rack_bits > 0
 
 
 def test_spill_case_really_has_leftovers():
